@@ -1,0 +1,62 @@
+"""Fig. 2 + Table I: CPU-based app, sync vs async image generation.
+
+Strong-scaling over 1..8 "nodes" x 72 cores. The in-situ task (training-
+analytics rendering, our ParaView analog) is calibrated REAL on one thread;
+its scaling follows the image-generation Amdahl curve (sigma=0.15 — the
+paper's 'worse scalability of image generation'); the app scales ~ideally
+(SEM/NEKO-like). Validates F1: async beats sync, optimum where app time ≈
+task time, and the best p_i GROWS with node count (Table I).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import analysis
+from repro.core.allocator import Allocator
+
+
+def task(step, payload):
+    return analysis.tensor_summary("field", payload, step, work=2)
+
+
+def run(quick: bool = True) -> list[dict]:
+    field = common.turbulence_field(1 << 16 if quick else 1 << 20)
+    t1 = common.calibrate_task(task, field)
+    steps, every = 2000, 20
+    fires = steps // every
+    # workload ratio calibrated to the paper's 1-node optimum (p_i=2 of 72):
+    # app on 70 cores ~ 100 firings of the task on 2 cores
+    app_unit = 2.0 * t1     # app step time at 1 core
+    out = []
+    prev_best_pi = 0
+    for nodes in (1, 2, 3, 4, 6, 8):
+        p_t = 72 * nodes
+        al = Allocator(p_total=p_t, handoff_s=t1 * 0.01)
+        # app: near-ideal strong scaling; task: image-gen Amdahl
+        for p in (p_t // 4, p_t // 2, p_t):
+            al.observe_app(p, app_unit / p)
+        img = common.amdahl_from_calibration(t1, sigma=0.15)
+        for p in (1, 4, 16, 64):
+            al.observe_task(p, img.predict(p))
+        plan = al.plan(steps, every)
+        t_sync = (steps * al.app.predict(p_t)
+                  + fires * al.task.predict(p_t))
+        common.row(f"fig02/nodes{nodes}/sync", t_sync * 1e6 / steps,
+                   "model")
+        common.row(f"fig02/nodes{nodes}/async_best",
+                   plan.predicted_total_s * 1e6 / steps,
+                   f"model;p_i={plan.p_insitu};balance="
+                   f"{al.balance_quality(plan):.2f}")
+        assert plan.mode == "async"
+        assert plan.predicted_total_s < t_sync          # F1: async wins
+        assert plan.p_insitu >= prev_best_pi            # Table I: p_i grows
+        prev_best_pi = plan.p_insitu
+        out.append({"nodes": nodes, "sync_s": t_sync,
+                    "async_s": plan.predicted_total_s,
+                    "best_p_i": plan.p_insitu})
+    return out
+
+
+if __name__ == "__main__":
+    run()

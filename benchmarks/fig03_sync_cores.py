@@ -1,0 +1,47 @@
+"""Fig. 3: GPU-accelerated app + SYNC image generation vs host cores.
+
+The device (sleep) runs the simulation; the synchronous in-situ task stalls
+the loop. More host cores shrink the stall (internally-parallel task).
+Measured at p=1 (container limit), model curve for the paper's 4..36 cores.
+Validates: total time decreases with cores while the device time is flat.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import analysis
+from repro.core.insitu import InSituMode
+
+
+def task(step, payload):
+    return analysis.tensor_summary("field", payload, step, work=2)
+
+
+def run(quick: bool = True) -> list[dict]:
+    field = common.turbulence_field(1 << 16 if quick else 1 << 20)
+    step_s = 0.01 if quick else 0.05
+    n_steps, every = (10, 2) if quick else (100, 10)
+
+    # REAL measurement, 1 worker, sync
+    res = common.run_modes(task, field, n_steps=n_steps, step_s=step_s,
+                           every=every, p_i=1,
+                           modes=(InSituMode.SYNC,))["sync"]
+    t_task = common.calibrate_task(task, field)
+    img = common.amdahl_from_calibration(t_task, sigma=0.15)
+    fires = (n_steps + every - 1) // every
+    device_s = n_steps * step_s
+    out = []
+    common.row("fig03/cores1/measured_total", res["wall_s"] * 1e6 / n_steps,
+               f"sync_stall_s={res['sync_stall_s']:.3f}")
+    for cores in (4, 8, 12, 24, 36):
+        total = device_s + fires * img.predict(cores)
+        common.row(f"fig03/cores{cores}/total", total * 1e6 / n_steps,
+                   "model")
+        out.append({"cores": cores, "total_s": total})
+    # device time flat; totals decrease monotonically
+    assert all(out[i]["total_s"] >= out[i + 1]["total_s"]
+               for i in range(len(out) - 1))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Fig. 4: async allocation sweep, three experiment groups (GPU nodes).
+
+ (left)   vary app cores, task cores fixed  -> total ~flat (device-bound)
+ (middle)  app cores fixed, vary task cores  -> total drops until task ≈ app,
+           then flat
+ (right)   equal cores both sides           -> drops then slight rise
+Model-extrapolated from a REAL task calibration (1-core container).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import analysis
+
+
+def task(step, payload):
+    return analysis.tensor_summary("field", payload, step, work=2)
+
+
+def run(quick: bool = True) -> dict:
+    field = common.turbulence_field(1 << 16 if quick else 1 << 20)
+    t1 = common.calibrate_task(task, field)
+    img = common.amdahl_from_calibration(t1, sigma=0.15)
+    steps, every = 2000, 50
+    fires = steps // every
+    device_total = steps * 0.6 * t1   # NEKO on 8 GPUs, device-side
+    handoff = 0.01 * t1
+
+    def total_async(p_task):
+        app = device_total + fires * handoff
+        tsk = fires * img.predict(p_task)
+        return max(app, tsk) + img.predict(p_task)  # + non-overlapped tail
+
+    out = {"left": [], "middle": [], "right": []}
+    for p_app in (8, 16, 32, 48, 128):     # left: task cores fixed at 16
+        t = total_async(16)
+        common.row(f"fig04/left/app{p_app}", t * 1e6 / steps, "model")
+        out["left"].append(t)
+    for p_task in (8, 16, 32, 48, 128):    # middle: app cores fixed at 16
+        t = total_async(p_task)
+        common.row(f"fig04/mid/task{p_task}", t * 1e6 / steps, "model")
+        out["middle"].append(t)
+    for p in (8, 16, 24, 32, 72):          # right: equal split
+        t = total_async(p)
+        common.row(f"fig04/equal/p{p}", t * 1e6 / steps, "model")
+        out["right"].append(t)
+    # left group ~flat (same GPUs, same task cores)
+    assert max(out["left"]) - min(out["left"]) < 1e-9
+    # middle group monotone non-increasing, then flat at device bound
+    assert all(a >= b - 1e-12 for a, b in zip(out["middle"], out["middle"][1:]))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Fig. 7: GPU app + SYNCHRONOUS lossy+lossless compression.
+
+REAL: device=sleep; the lossy stage (spectral codec) runs "on device" (its
+host cost measured separately and reported, like the paper's 'lossy adds
+time to NEKO on GPU'); the lossless stage (bz2) stalls the loop. Total
+drops with host cores (model) because lossless parallelizes per-tensor.
+"""
+from __future__ import annotations
+
+import bz2
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.insitu import InSituMode
+from repro.kernels import ops
+
+
+def run(quick: bool = True) -> dict:
+    field = common.turbulence_field(1 << 16 if quick else 1 << 20)
+
+    # device-side lossy stage, once per firing (timed separately)
+    t0 = time.perf_counter()
+    c = ops.spectral_compress(field, 1e-2)
+    q = np.asarray(c.q)
+    lossy_s = time.perf_counter() - t0
+
+    def lossless_task(step, payload):
+        return len(bz2.compress(payload.tobytes(), 9))
+
+    t_lossless_raw = common.calibrate_task(
+        lambda s, p: len(bz2.compress(p.tobytes(), 9)), field)
+    n, every = (10, 2) if quick else (40, 5)
+    step_s = max(0.01, t_lossless_raw)
+    res = common.run_modes(
+        lambda s, p: lossless_task(s, p), field, n_steps=n, step_s=step_s,
+        every=every, p_i=1, modes=(InSituMode.SYNC,))["sync"]
+    common.row("fig07/sync_raw_lossless/wall", res["wall_s"] * 1e6 / n,
+               f"measured;stall={res['sync_stall_s']:.3f}")
+    common.row("fig07/device_lossy_stage", lossy_s * 1e6, "measured_host")
+
+    comp = common.amdahl_from_calibration(t_lossless_raw, sigma=0.02)
+    fires = n // every
+    out = []
+    for cores in (4, 8, 12, 16, 20, 24):
+        total = n * step_s + fires * comp.predict(cores)
+        common.row(f"fig07/cores{cores}/total", total * 1e6 / n, "model")
+        out.append(total)
+    assert all(a >= b for a, b in zip(out, out[1:]))   # drops with cores
+    return {"measured": res, "model_totals": out, "lossy_s": lossy_s}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+
+def load_reports(pattern: str = "*.json") -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(quick: bool = True) -> list[dict]:
+    reports = [r for r in load_reports() if not r.get("tag")]
+    if not reports:
+        common.row("roofline/no_artifacts", 0.0,
+                   "run `python -m repro.launch.dryrun` first")
+        return []
+    for r in reports:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        common.row(
+            name, r["step_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+            f"compute={r['compute_s']:.4f};mem={r['memory_s']:.4f};"
+            f"coll={r['collective_s']:.4f};useful={r['useful_flops_ratio']:.2f}")
+    return reports
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+``python -m benchmarks.run [--full]`` prints CSV rows name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger payloads / more steps")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig02_cpu_sync_vs_async, fig03_sync_cores,
+                            fig04_async_allocation, fig05_insitu_frequency,
+                            fig06_scaling_nodes, fig07_sync_compression,
+                            fig08_hybrid_compression,
+                            fig09_compression_scaling,
+                            fig10_12_qe_checkpoint, lossy_ratio, roofline,
+                            tab2_codecs)
+
+    benches = [
+        ("fig02", fig02_cpu_sync_vs_async.run),
+        ("fig03", fig03_sync_cores.run),
+        ("fig04", fig04_async_allocation.run),
+        ("fig05", fig05_insitu_frequency.run),
+        ("fig06", fig06_scaling_nodes.run),
+        ("fig07", fig07_sync_compression.run),
+        ("fig08", fig08_hybrid_compression.run),
+        ("fig09", fig09_compression_scaling.run),
+        ("fig10_12", fig10_12_qe_checkpoint.run),
+        ("tab2", tab2_codecs.run),
+        ("lossy_ratio", lossy_ratio.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}")
+    if failures:
+        sys.exit(f"{len(failures)} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""The paper's compression story on training state, end to end.
+
+Shows (1) Table II: plain lossless barely compresses float tensors,
+(2) §IV-B: spectral lossy + lossless removes ~98% on smooth fields with a
+hard error bound, (3) the checkpoint-manager integration: lossy moments +
+lossless weights, written asynchronously, restored elastically.
+
+    PYTHONPATH=src python examples/compression_demo.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import codecs
+from repro.core.insitu import InSituMode
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    print("== Table II analog: lossless CR on float data ==")
+    t = np.linspace(0, 40, 1 << 18)
+    field = (np.sin(t) + 0.3 * np.sin(7.3 * t)
+             + 0.01 * rng.standard_normal(t.size)).astype(np.float32)
+    for codec in ("zlib", "bz2", "lzma"):
+        cr = codecs.compression_ratio(field, codec).ratio
+        print(f"  {codec:5s}: CR = {cr * 100:5.2f}%  (paper: 1.5-10%)")
+
+    print("\n== §IV-B: spectral lossy + lossless at eps=1e-2 ==")
+    x = jnp.asarray(field)
+    c = ops.spectral_compress(x, 1e-2)
+    xh = ops.spectral_decompress(c)
+    blob, _ = codecs.encode(np.asarray(c.q), "zlib")
+    stored = len(blob) + int(np.asarray(c.scale).nbytes)
+    print(f"  removed {(field.nbytes - stored) / field.nbytes * 100:.2f}% "
+          f"(paper: ~98%), rel-L2 error {ref.rel_l2_error(x, xh):.4f}, "
+          f"kept coeffs {ref.kept_fraction(c) * 100:.2f}%")
+
+    print("\n== checkpoint integration (hybrid in-situ) ==")
+    params = {"w": jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+              .astype(jnp.bfloat16)}
+    st = optim.init(params, optim.AdamWConfig())
+    state = {"params": params, "mu": st.mu, "nu": st.nu}
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(CheckpointConfig(d, mode=InSituMode.HYBRID,
+                                             every=1))
+    mgr.save(100, state)
+    mgr.wait_idle()
+    mgr.finish()
+    rep = mgr.reports[-1]
+    print(f"  checkpoint: {rep.raw_bytes} B raw -> {rep.stored_bytes} B "
+          f"stored (CR {rep.ratio * 100:.1f}%), "
+          f"{rep.lossy_leaves}/{rep.n_leaves} leaves lossy")
+    step, restored = mgr.restore(state)
+    exact = bool(jnp.all(restored["params"]["w"] == params["w"]))
+    print(f"  restored step {step}: weights bit-exact = {exact}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the in-situ engine in 60 lines.
+
+Runs a tiny jitted "simulation" (a training step stand-in), attaches the
+three in-situ modes from the paper, and prints the telemetry that the paper
+reads off NSight: sync stalls the loop, async hides the work behind the
+device, hybrid ships 25-50x less data across the device->host boundary.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import InSituEngine, InSituMode, InSituTask, run_workflow
+from repro.core import codecs
+from repro.kernels import ops
+
+
+def main() -> None:
+    # the "application": any jitted device step
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((512, 512)),
+                    jnp.float32)
+
+    @jax.jit
+    def sim_step(x):
+        for _ in range(8):
+            x = jnp.tanh(x @ w)
+        return x
+
+    state = {"x": jnp.ones((512, 512), jnp.float32)}
+
+    def app_step(i):
+        state["x"] = sim_step(state["x"])
+        state["x"].block_until_ready()
+        return {
+            "raw": lambda: np.asarray(state["x"]),
+            # hybrid: the lossy stage runs on DEVICE; host gets int8 residue
+            "residue": lambda: np.asarray(
+                ops.spectral_compress(state["x"], 1e-2).q),
+        }
+
+    def compress(step, payload):
+        blob, st = codecs.encode(payload, "zlib")
+        return st.ratio
+
+    for mode, source in ((InSituMode.SYNC, "raw"),
+                         (InSituMode.ASYNC, "raw"),
+                         (InSituMode.HYBRID, "residue")):
+        engine = InSituEngine(
+            [InSituTask("compress", source, compress, mode=mode, every=2)],
+            p_i=2)
+        t0 = time.perf_counter()
+        run_workflow(10, app_step, engine)
+        wall = time.perf_counter() - t0
+        rep = engine.report()
+        print(f"{mode.value:6s}: wall={wall:.3f}s "
+              f"stall={rep['sync_stall_s']:.3f}s "
+              f"overlapped={rep['async_overlapped_s']:.3f}s "
+              f"handoff={rep['handoff_s']:.4f}s "
+              f"results={rep['n_results']}")
+
+
+if __name__ == "__main__":
+    main()

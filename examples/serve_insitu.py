@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests + in-situ serving analytics.
+
+    PYTHONPATH=src python examples/serve_insitu.py --requests 8
+"""
+import argparse
+
+from repro.launch.serve import serve_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--insitu", default="async",
+                    choices=["sync", "async", "hybrid"])
+    args = ap.parse_args()
+    out = serve_loop(args.arch, n_requests=args.requests,
+                     max_new=args.max_new, insitu_mode=args.insitu)
+    for r in out["requests"][:4]:
+        print(f"request {r.rid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.manager import (CheckpointConfig, CheckpointManager,
+                                      default_lossy_policy)
+from repro.checkpoint import serialization
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "default_lossy_policy",
+           "serialization"]

@@ -1,0 +1,31 @@
+"""qwen1.5-110b [dense] — QKV bias, GQA. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen1.5-110B",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=192,
+        vocab_size=257,
+        qkv_bias=True,
+        q_chunk=16,
+        kv_chunk=16,
+    )

@@ -1,0 +1,8 @@
+"""The paper's contribution: in-situ task placement for accelerator loops."""
+from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
+                               run_workflow)
+from repro.core.staging import StagedItem, StagingBuffer
+from repro.core.telemetry import Telemetry
+
+__all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
+           "StagedItem", "StagingBuffer", "Telemetry"]

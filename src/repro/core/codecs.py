@@ -1,0 +1,130 @@
+"""Host-side lossless codecs + tensor framing (the paper's Table II layer).
+
+The paper evaluates Bzip2 / LZ4 / LZ4HC / ZLIB / ZSTD on raw floating-point
+simulation output (Table II) and finds plain lossless compression removes only
+1.5-10 % — which is exactly why the lossy+lossless *hybrid* pipeline exists.
+We reproduce that comparison on training-state tensors (bf16/f32 weights,
+moments) in ``benchmarks/tab2_codecs.py``.
+
+Framing: every compressed tensor is self-describing —
+  MAGIC | version | codec id | dtype | ndim | shape | raw nbytes | payload
+so a checkpoint shard can be decoded without out-of-band metadata (the
+restart path depends only on the manifest listing file names).
+
+All stdlib codecs (zlib/bz2/lzma) release the GIL during (de)compression, so
+async in-situ workers genuinely overlap with the host-side training loop —
+this is what makes the in-process analog of the paper's MPMD split honest.
+"""
+from __future__ import annotations
+
+import bz2
+import lzma
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+MAGIC = b"RPRC"
+_VERSION = 1
+
+# codec registry: name -> (id, compress, decompress)
+_COMPRESSORS: dict[str, tuple[int, Callable[[bytes], bytes],
+                              Callable[[bytes], bytes]]] = {
+    "none": (0, lambda b: b, lambda b: b),
+    "zlib": (1, lambda b: zlib.compress(b, 6), zlib.decompress),
+    "zlib1": (2, lambda b: zlib.compress(b, 1), zlib.decompress),
+    "zlib9": (3, lambda b: zlib.compress(b, 9), zlib.decompress),
+    "bz2": (4, lambda b: bz2.compress(b, 9), bz2.decompress),
+    "lzma": (5, lambda b: lzma.compress(b, preset=1), lzma.decompress),
+}
+
+try:  # optional, mirrors the paper's ZSTD/LZ4 rows when available
+    import zstandard  # type: ignore
+
+    _COMPRESSORS["zstd"] = (
+        6,
+        lambda b: zstandard.ZstdCompressor(level=3).compress(b),
+        lambda b: zstandard.ZstdDecompressor().decompress(b),
+    )
+except ImportError:
+    pass
+
+try:
+    import lz4.frame  # type: ignore
+
+    _COMPRESSORS["lz4"] = (7, lz4.frame.compress, lz4.frame.decompress)
+except ImportError:
+    pass
+
+_BY_ID = {cid: (name, c, d) for name, (cid, c, d) in _COMPRESSORS.items()}
+
+
+def available() -> list[str]:
+    return sorted(_COMPRESSORS)
+
+
+@dataclass(frozen=True)
+class CompressionStats:
+    codec: str
+    raw_bytes: int
+    compressed_bytes: int
+
+    @property
+    def ratio(self) -> float:
+        """Paper Eq. (1): CR = (original - compressed) / original."""
+        if self.raw_bytes == 0:
+            return 0.0
+        return (self.raw_bytes - self.compressed_bytes) / self.raw_bytes
+
+
+def _dtype_token(dtype: np.dtype) -> bytes:
+    return np.dtype(dtype).str.encode()
+
+
+def encode(arr: np.ndarray, codec: str = "zlib") -> tuple[bytes, CompressionStats]:
+    """Frame + losslessly compress one ndarray."""
+    if codec not in _COMPRESSORS:
+        raise KeyError(f"unknown codec {codec!r}; available: {available()}")
+    cid, comp, _ = _COMPRESSORS[codec]
+    arr = np.ascontiguousarray(arr)
+    raw = arr.tobytes()
+    payload = comp(raw)
+    dt = _dtype_token(arr.dtype)
+    header = MAGIC + struct.pack(
+        "<BBB", _VERSION, cid, len(dt)) + dt + struct.pack(
+        "<B", arr.ndim) + struct.pack(f"<{arr.ndim}q", *arr.shape) + struct.pack(
+        "<q", len(raw))
+    blob = header + payload
+    return blob, CompressionStats(codec, len(raw), len(blob))
+
+
+def decode(blob: bytes) -> np.ndarray:
+    if blob[:4] != MAGIC:
+        raise ValueError("bad frame magic")
+    off = 4
+    version, cid, dtlen = struct.unpack_from("<BBB", blob, off)
+    off += 3
+    if version != _VERSION:
+        raise ValueError(f"unsupported frame version {version}")
+    dtype = np.dtype(blob[off:off + dtlen].decode())
+    off += dtlen
+    (ndim,) = struct.unpack_from("<B", blob, off)
+    off += 1
+    shape = struct.unpack_from(f"<{ndim}q", blob, off)
+    off += 8 * ndim
+    (raw_nbytes,) = struct.unpack_from("<q", blob, off)
+    off += 8
+    _, _, decomp = _BY_ID[cid]
+    raw = decomp(blob[off:])
+    if len(raw) != raw_nbytes:
+        raise ValueError(f"frame length mismatch: {len(raw)} != {raw_nbytes}")
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+
+def compression_ratio(arr: np.ndarray, codec: str) -> CompressionStats:
+    """Measure-only path (paper Table II): no framing overhead included."""
+    _, comp, _ = _COMPRESSORS[codec]
+    raw = arr.tobytes()
+    return CompressionStats(codec, len(raw), len(comp(raw)))

@@ -1,0 +1,159 @@
+"""Spectral lossy codec API: error-bounded pytree compression.
+
+Wraps the kernels (Pallas on TPU, interpret/jnp on CPU) with:
+  * pytree walking (compress a whole checkpoint state in one call)
+  * the lossy -> lossless two-stage pipeline of the paper's hybrid mode
+    (device kernel produces dense int8 q + per-block scales; the host lossless
+    codec then removes the zero runs — exactly NEKO's lossy-on-GPU +
+    Bzip2-on-host split)
+  * error-bound accounting: relative-L2 <= eps (threshold) + sqrt(B)/254
+    (int8 quantization); tests enforce the combined bound.
+
+A policy decides which leaves may be lossy: by default only optimizer
+*moments* (noise-dominated statistics — the ML analog of the paper's
+"keep the energetic motions" physics argument) are lossy; weights stay
+lossless. Override per-call.
+"""
+from __future__ import annotations
+
+import io
+import struct
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs
+from repro.kernels import ops, ref
+
+PyTree = Any
+
+LOSSY_MAGIC = b"RPLY"
+
+
+@dataclass(frozen=True)
+class LossyStats:
+    raw_bytes: int
+    stored_bytes: int
+    kept_fraction: float
+    rel_l2_error: Optional[float] = None   # only when measure=True
+
+    @property
+    def ratio(self) -> float:
+        if self.raw_bytes == 0:
+            return 0.0
+        return (self.raw_bytes - self.stored_bytes) / self.raw_bytes
+
+
+def error_bound(eps: float) -> float:
+    return ref.error_bound(eps)
+
+
+# ---------------------------------------------------------------------------
+# single tensor: device lossy stage -> host lossless stage -> framed bytes
+# ---------------------------------------------------------------------------
+
+def frame_compressed(c: ref.Compressed, lossless: str = "zlib"
+                     ) -> tuple[bytes, LossyStats]:
+    """Host lossless stage: pack a device-produced Compressed into bytes."""
+    q = np.asarray(c.q)
+    scale = np.asarray(c.scale)
+    q_blob, _ = codecs.encode(q, lossless)
+    s_blob, _ = codecs.encode(scale, lossless)
+    shape = tuple(int(d) for d in c.shape)
+    dt = jnp.dtype(c.dtype).name.encode()   # name token: handles bf16
+    header = LOSSY_MAGIC + struct.pack("<B", len(dt)) + dt + struct.pack(
+        "<qB", c.n_elements, len(shape)) + struct.pack(
+        f"<{len(shape)}q", *shape) + struct.pack("<qq", len(q_blob), len(s_blob))
+    blob = header + q_blob + s_blob
+    raw = (int(np.prod(shape)) if shape else 1) \
+        * np.dtype(jnp.dtype(c.dtype)).itemsize
+    return blob, LossyStats(raw, len(blob), float(np.mean(q != 0)))
+
+
+def compress_tensor(x: jax.Array | np.ndarray, eps: float = 1e-2,
+                    lossless: str = "zlib",
+                    measure: bool = False) -> tuple[bytes, LossyStats]:
+    x = jnp.asarray(x)
+    c = ops.spectral_compress(x, eps)          # device lossy stage
+    blob, st = frame_compressed(c, lossless)   # host lossless stage
+    if measure:
+        st = LossyStats(st.raw_bytes, st.stored_bytes, st.kept_fraction,
+                        ref.rel_l2_error(x, ops.spectral_decompress(c)))
+    return blob, st
+
+
+def decompress_tensor(blob: bytes) -> jax.Array:
+    if blob[:4] != LOSSY_MAGIC:
+        raise ValueError("bad lossy frame magic")
+    off = 4
+    (dtlen,) = struct.unpack_from("<B", blob, off)
+    off += 1
+    name = blob[off:off + dtlen].decode()
+    try:
+        dtype = np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        dtype = np.dtype(getattr(ml_dtypes, name))
+    off += dtlen
+    n_elements, ndim = struct.unpack_from("<qB", blob, off)
+    off += 9
+    shape = struct.unpack_from(f"<{ndim}q", blob, off)
+    off += 8 * ndim
+    qlen, slen = struct.unpack_from("<qq", blob, off)
+    off += 16
+    q = jnp.asarray(codecs.decode(blob[off:off + qlen]))
+    scale = jnp.asarray(codecs.decode(blob[off + qlen:off + qlen + slen]))
+    c = ref.Compressed(q, scale, n_elements, tuple(shape), jnp.dtype(dtype))
+    return ops.spectral_decompress(c)
+
+
+# ---------------------------------------------------------------------------
+# pytree policy + walking
+# ---------------------------------------------------------------------------
+
+def moments_only_policy(path: tuple, leaf) -> bool:
+    """Default: lossy for optimizer moment statistics, lossless for weights."""
+    keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return any(tok in keys for tok in ("mu", "nu", "m1", "m2", "moment"))
+
+
+def compress_tree(tree: PyTree, eps: float = 1e-2, lossless: str = "zlib",
+                  policy: Callable[[tuple, Any], bool] = moments_only_policy,
+                  ) -> tuple[dict[str, bytes], dict[str, LossyStats | codecs.CompressionStats]]:
+    """Returns ({path: framed blob}, {path: stats}). Lossless leaves use codecs."""
+    blobs: dict[str, bytes] = {}
+    stats: dict[str, Any] = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if policy(path, leaf):
+            blob, st = compress_tensor(leaf, eps, lossless)
+        else:
+            blob, st = codecs.encode(arr, lossless)
+        blobs[key] = blob
+        stats[key] = st
+    return blobs, stats
+
+
+def decompress_blob(blob: bytes) -> np.ndarray | jax.Array:
+    if blob[:4] == LOSSY_MAGIC:
+        return decompress_tensor(blob)
+    return codecs.decode(blob)
+
+
+def restore_tree(template: PyTree, blobs: dict[str, bytes]) -> PyTree:
+    """Rebuild a pytree (same structure as template) from framed blobs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = decompress_blob(blobs[key])
+        arr = jnp.asarray(arr)
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype).reshape(leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,117 @@
+"""StagingBuffer — the ADIOS2 "insituMPI" analog.
+
+In the paper's asynchronous mode (Fig. 1b), the application transfers data to
+the in-situ ranks via an ADIOS2 writer/reader pair and *only blocks for the
+send*; both sides then proceed concurrently. Our TPU-host analog:
+
+  producer (training loop):  put(step, payload)       # blocks only on hand-off
+  consumers (p_i workers):   get() -> StagedItem      # FIFO, blocking
+
+The ring is bounded (``capacity``) — a slow in-situ side eventually exerts
+backpressure on the producer, which is precisely the paper's F3 regime (task
+issued every 10 steps outgrows all spare cores and dominates). The time the
+producer spends blocked on a full ring is recorded as ``staging/wait`` so the
+benchmarks can attribute it, like the paper attributes ADIOS2 stalls.
+
+Payloads are host numpy arrays (the device->host ``jax.device_get`` happens in
+the engine *before* put, because that transfer is the part of the hand-off the
+device genuinely serializes on).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.core.telemetry import Telemetry
+
+
+@dataclass
+class StagedItem:
+    step: int
+    name: str
+    payload: Any                      # pytree of np.ndarray / bytes / metadata
+    enqueued_at: float = field(default_factory=time.perf_counter)
+
+
+class Closed(Exception):
+    """Raised by get() after close() once the ring has drained."""
+
+
+_SENTINEL = object()   # close() wake-up marker (never a real item)
+
+
+class StagingBuffer:
+    def __init__(self, capacity: int = 4,
+                 telemetry: Optional[Telemetry] = None) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._q: "queue.Queue[StagedItem]" = queue.Queue(maxsize=capacity)
+        self._closed = threading.Event()
+        self._telemetry = telemetry
+        self.puts = 0
+        self.gets = 0
+
+    # -- producer side --------------------------------------------------------
+
+    def put(self, item: StagedItem, timeout: Optional[float] = None) -> None:
+        if self._closed.is_set():
+            raise Closed("staging buffer is closed")
+        t0 = time.perf_counter()
+        self._q.put(item, timeout=timeout)
+        t1 = time.perf_counter()
+        self.puts += 1
+        if self._telemetry is not None and t1 - t0 > 1e-5:
+            self._telemetry.record("staging/wait", t0, t1, step=item.step)
+
+    def try_put(self, item: StagedItem) -> bool:
+        """Non-blocking variant (drop-on-full policies, e.g. telemetry tasks)."""
+        if self._closed.is_set():
+            raise Closed("staging buffer is closed")
+        try:
+            self._q.put_nowait(item)
+            self.puts += 1
+            return True
+        except queue.Full:
+            return False
+
+    # -- consumer side ---------------------------------------------------------
+
+    def get(self, timeout: float = 0.1) -> StagedItem:
+        """Blocking pop; raises Closed when the buffer is closed *and* empty."""
+        while True:
+            try:
+                item = self._q.get(timeout=timeout)
+                if item is _SENTINEL:
+                    # propagate the wake-up to any sibling consumer
+                    try:
+                        self._q.put_nowait(_SENTINEL)
+                    except queue.Full:
+                        pass
+                    raise Closed
+                self.gets += 1
+                return item
+            except queue.Empty:
+                if self._closed.is_set():
+                    raise Closed
+                continue
+
+    # -- lifecycle --------------------------------------------------------------
+
+    def close(self) -> None:
+        """Close and wake blocked consumers immediately (sentinel)."""
+        self._closed.set()
+        try:
+            self._q.put_nowait(_SENTINEL)
+        except queue.Full:
+            pass
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    def __len__(self) -> int:
+        return self._q.qsize()

@@ -1,0 +1,149 @@
+"""Runtime event log: per-step / per-task wall-clock spans.
+
+The paper's methodology is *measurement*: every figure is an execution-time
+comparison between in-situ modes (plus NSight/HPC-monitor evidence that the
+accelerator does or does not stall). This module is the framework's analog of
+that instrumentation layer — a lightweight, thread-safe span recorder that the
+training loop, the staging buffer, and the in-situ workers all write into; the
+benchmarks then aggregate the spans exactly the way the paper's figures do
+(total time, app time, in-situ time, hand-off time).
+
+Spans are (name, t0, t1, thread, step, meta). Aggregation is by name prefix:
+  step/compute        device step (dispatch->blocked-on-result)
+  step/handoff        device->host transfer the app blocks on (ADIOS2 send)
+  insitu/<task>/sync  inline (blocking) task execution
+  insitu/<task>/async worker-side task execution (overlapped)
+  staging/wait        producer blocked on a full ring (backpressure)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Optional
+
+
+@dataclass
+class Span:
+    name: str
+    t0: float
+    t1: float
+    thread: str
+    step: int = -1
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def dt(self) -> float:
+        return self.t1 - self.t0
+
+
+class Telemetry:
+    """Thread-safe span log. One instance per run (engine/loop share it)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._spans: list[Span] = []
+        self._counters: dict[str, float] = defaultdict(float)
+
+    # -- recording -----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def span(self, name: str, step: int = -1, **meta: Any) -> Iterator[None]:
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            t1 = time.perf_counter()
+            with self._lock:
+                self._spans.append(
+                    Span(name, t0, t1, threading.current_thread().name, step,
+                         dict(meta)))
+
+    def record(self, name: str, t0: float, t1: float, step: int = -1,
+               **meta: Any) -> None:
+        with self._lock:
+            self._spans.append(
+                Span(name, t0, t1, threading.current_thread().name, step,
+                     dict(meta)))
+
+    def count(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] += value
+
+    # -- aggregation ---------------------------------------------------------
+
+    def spans(self, prefix: str = "") -> list[Span]:
+        with self._lock:
+            return [s for s in self._spans if s.name.startswith(prefix)]
+
+    def total(self, prefix: str) -> float:
+        return sum(s.dt for s in self.spans(prefix))
+
+    def counters(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._counters)
+
+    def wall(self, prefix: str = "") -> float:
+        """Wall-clock extent (union is approximated by max-end minus min-start)."""
+        ss = self.spans(prefix)
+        if not ss:
+            return 0.0
+        return max(s.t1 for s in ss) - min(s.t0 for s in ss)
+
+    def busy(self, prefix: str = "") -> float:
+        """Union of span intervals (true busy time across threads)."""
+        ss = sorted(self.spans(prefix), key=lambda s: s.t0)
+        if not ss:
+            return 0.0
+        total = 0.0
+        cur0, cur1 = ss[0].t0, ss[0].t1
+        for s in ss[1:]:
+            if s.t0 > cur1:
+                total += cur1 - cur0
+                cur0, cur1 = s.t0, s.t1
+            else:
+                cur1 = max(cur1, s.t1)
+        return total + (cur1 - cur0)
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        out: dict[str, dict[str, float]] = {}
+        with self._lock:
+            by_name: dict[str, list[Span]] = defaultdict(list)
+            for s in self._spans:
+                by_name[s.name].append(s)
+        for name, ss in sorted(by_name.items()):
+            dts = [s.dt for s in ss]
+            out[name] = {
+                "n": float(len(dts)),
+                "total_s": sum(dts),
+                "mean_s": sum(dts) / len(dts),
+                "max_s": max(dts),
+            }
+        return out
+
+    def step_overlap_report(self) -> dict[str, float]:
+        """The paper's NSight question: did the device stall for in-situ work?
+
+        Returns total app-step time, sync in-situ (stall) time, async in-situ
+        (overlapped) time, and hand-off time. For an ideal async run the stall
+        term is ~0 and only the hand-off remains on the critical path.
+        """
+        return {
+            "step_compute_s": self.total("step/compute"),
+            "handoff_s": self.total("step/handoff"),
+            "sync_stall_s": self.total("insitu-sync/"),
+            "async_overlapped_s": self.total("insitu-async/"),
+            "staging_backpressure_s": self.total("staging/wait"),
+        }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self._counters.clear()
+
+
+# A module-level default so simple call-sites don't need plumbing; the engine
+# and benchmarks construct their own instances for isolation.
+default = Telemetry()

@@ -1,0 +1,143 @@
+"""Fault tolerance: failure detection, elastic re-mesh planning, stragglers.
+
+The paper's checkpointing motivation ("limited walltimes and/or failures of
+system components") is the *why*; this module is the *how* for a 1000+-node
+posture:
+
+  * HeartbeatTracker — per-host liveness from periodic beats; a host missing
+    ``grace`` seconds is declared failed (in a real deployment the beat is a
+    tiny all-reduce or a KV write; here it is a call, injected by tests).
+  * StragglerMonitor — per-host step-time EWMA; hosts slower than
+    ``factor`` x median are flagged. Mitigation policy (documented, and what
+    the loop implements): flagged hosts get their *in-situ* p_i budget
+    reduced first (in-situ work is the elastic slack on a node — exactly the
+    paper's observation that in-situ tasks share node resources), and if
+    still slow they are scheduled for replacement at the next checkpoint
+    boundary.
+  * plan_elastic_remesh — given the surviving host count, pick the largest
+    (data, model) grid that (a) fits the survivors, (b) keeps 'model' a
+    divisor of the old model axis (so TP shards merge/split cleanly), and
+    return the shard remap plan. Restore is checkpoint-based: state is
+    logically complete on disk (in-situ compressed), so resuming on the new
+    mesh is read + re-place (serialization.read_state with new shardings).
+
+Recovery invariant: checkpoint steps are atomic (manifest-last), so the
+resumed step is always a step that fully finished.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class HeartbeatTracker:
+    def __init__(self, hosts: list[int], grace_s: float = 30.0) -> None:
+        self.grace_s = grace_s
+        self.last_seen: dict[int, float] = {h: time.monotonic() for h in hosts}
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def failed_hosts(self, now: Optional[float] = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(h for h, t in self.last_seen.items()
+                      if now - t > self.grace_s)
+
+    def alive_hosts(self, now: Optional[float] = None) -> list[int]:
+        failed = set(self.failed_hosts(now))
+        return sorted(h for h in self.last_seen if h not in failed)
+
+
+class StragglerMonitor:
+    """Step-time EWMA per host; flags hosts slower than factor x median."""
+
+    def __init__(self, alpha: float = 0.2, factor: float = 1.5) -> None:
+        self.alpha = alpha
+        self.factor = factor
+        self.ewma: dict[int, float] = {}
+
+    def observe(self, host: int, step_s: float) -> None:
+        prev = self.ewma.get(host)
+        self.ewma[host] = (step_s if prev is None
+                           else (1 - self.alpha) * prev + self.alpha * step_s)
+
+    def median(self) -> float:
+        if not self.ewma:
+            return 0.0
+        vals = sorted(self.ewma.values())
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> list[int]:
+        med = self.median()
+        if med <= 0:
+            return []
+        return sorted(h for h, v in self.ewma.items()
+                      if v > self.factor * med)
+
+    def mitigation(self, host: int) -> str:
+        """Policy: shed in-situ load first, then replace at ckpt boundary."""
+        med = self.median()
+        v = self.ewma.get(host, 0.0)
+        if med <= 0 or v <= self.factor * med:
+            return "none"
+        if v <= 2 * self.factor * med:
+            return "reduce_insitu_pi"      # free host cores for the app
+        return "replace_at_checkpoint"
+
+    def report(self) -> dict:
+        return {"median_s": self.median(), "stragglers": self.stragglers(),
+                "ewma": dict(self.ewma)}
+
+
+@dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    dropped_hosts: list[int]
+    # how each old TP shard index maps into the new model axis
+    model_merge_factor: int
+
+    @property
+    def new_device_count(self) -> int:
+        n = 1
+        for s in self.new_shape:
+            n *= s
+        return n
+
+
+def plan_elastic_remesh(old_shape: tuple, axis_names: tuple,
+                        surviving_devices: int,
+                        failed_hosts: Optional[list[int]] = None) -> RemeshPlan:
+    """Largest (.., data', model') grid that fits the survivors.
+
+    'model' may only *shrink by integer division* (TP shards merge cleanly:
+    new shard j = concat of old shards j*f..j*f+f-1); 'data' absorbs the
+    rest. The 'pod' axis, when present, only shrinks by whole pods.
+    """
+    sizes = dict(zip(axis_names, old_shape))
+    old_model = sizes.get("model", 1)
+    old_pod = sizes.get("pod", 1)
+    best = None
+    for pod in range(old_pod, 0, -1):
+        for f in [1, 2, 4, 8, 16]:
+            if old_model % f:
+                continue
+            model = old_model // f
+            data = surviving_devices // (pod * model)
+            if data < 1:
+                continue
+            n = pod * data * model
+            if n <= surviving_devices and (best is None or n > best[0]):
+                best = (n, pod, data, model, f)
+    if best is None:
+        raise ValueError("no valid re-mesh for the surviving devices")
+    _, pod, data, model, f = best
+    if "pod" in sizes:
+        new_shape = (pod, data, model)
+    else:
+        new_shape = (data, model)
+    return RemeshPlan(tuple(old_shape), new_shape, tuple(axis_names),
+                      failed_hosts or [], f)

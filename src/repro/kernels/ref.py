@@ -1,0 +1,212 @@
+"""Pure-jnp oracle for the spectral lossy codec (+ the sort-based reference).
+
+Pipeline (TPU-native adaptation of NEKO's physics-based lossy compression,
+Otero et al. 2018 / paper §IV-B):
+
+  1. blockize: flatten + zero-pad the tensor to (n_blocks, B), B=256
+  2. transform: orthonormal DCT-II per block, recast as a matmul (MXU)
+  3. select:   keep only the most *energetic* coefficients, subject to a
+               relative-L2 error budget eps — discarded energy <= eps^2 * total
+  4. quantize: survivors -> int8 with a per-block scale
+
+The paper's GPU implementation selects by *sorting* coefficient magnitudes
+(its two dominant kernels are sorts, §IV-B/NSight — finding F7). Sorts are a
+poor fit for the TPU VPU, so the deployed kernel selects by *histogram
+threshold*: one pass builds an absolute log2-magnitude histogram of
+(count, energy) per bin; the threshold is the largest bin edge whose
+below-edge cumulative energy fits the budget. That is sort-free, one extra
+reduction pass, and conservative (never discards more energy than the sorted
+selection would at the same threshold).
+
+This module is the *oracle*: straight-line jnp, no tiling, plus the exact
+sort-based selector so tests can prove
+
+  energy(discarded by histogram-select) <= budget <= energy kept by sort-select
+  and  |kept_hist| >= |kept_sort at same budget|  (conservatism, bin-resolution)
+
+Everything here is used by tests and by ``core/lossy.py`` as a fallback when
+Pallas is unavailable.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256            # spectral block size (2 x 128 lanes, MXU-aligned)
+NBINS = 512            # log2-magnitude histogram bins
+LOG2_LO = -40.0        # histogram range: 2^-40 .. 2^40 (abs magnitudes)
+LOG2_HI = 40.0
+
+
+class Compressed(NamedTuple):
+    """Device-side lossy representation (dense; host lossless packs it)."""
+    q: jax.Array          # (n_blocks, BLOCK) int8 quantized coefficients
+    scale: jax.Array      # (n_blocks,) f32 per-block dequant scale
+    n_elements: int       # original element count (for unpad)
+    shape: tuple          # original shape
+    dtype: jnp.dtype      # original dtype
+
+
+# ---------------------------------------------------------------------------
+# DCT basis
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4)
+def dct_matrix(n: int = BLOCK) -> np.ndarray:
+    """Orthonormal DCT-II matrix D: y = D @ x, x = D.T @ y."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    d = np.cos(np.pi * k * (2 * i + 1) / (2 * n)) * np.sqrt(2.0 / n)
+    d[0] /= np.sqrt(2.0)
+    return d.astype(np.float32)
+
+
+def blockize(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, int]:
+    """Flatten + zero-pad to (n_blocks, block); returns (blocks, n_elements)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), n
+
+
+def unblockize(blocks: jax.Array, n: int, shape: tuple, dtype) -> jax.Array:
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def dct_blocks(xb: jax.Array) -> jax.Array:
+    d = jnp.asarray(dct_matrix(xb.shape[-1]))
+    return xb @ d.T
+
+
+def idct_blocks(yb: jax.Array) -> jax.Array:
+    d = jnp.asarray(dct_matrix(yb.shape[-1]))
+    return yb @ d
+
+
+# ---------------------------------------------------------------------------
+# Selection: histogram-threshold (TPU) and sort (GPU reference)
+# ---------------------------------------------------------------------------
+
+def energy_histogram(y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absolute log2-|y| histogram -> (counts, energies), each (NBINS,).
+
+    Exact zeros land in bin 0 (they carry no energy, so they never affect the
+    threshold decision).
+    """
+    a = jnp.abs(y.reshape(-1))
+    lg = jnp.where(a > 0, jnp.log2(jnp.maximum(a, 1e-38)), LOG2_LO)
+    idx = jnp.clip(
+        ((lg - LOG2_LO) * (NBINS / (LOG2_HI - LOG2_LO))).astype(jnp.int32),
+        0, NBINS - 1)
+    counts = jnp.zeros(NBINS, jnp.float32).at[idx].add(1.0)
+    energies = jnp.zeros(NBINS, jnp.float32).at[idx].add(a * a)
+    return counts, energies
+
+
+def bin_edge(b) -> jax.Array:
+    """Lower |y| edge of histogram bin b."""
+    return 2.0 ** (LOG2_LO + jnp.asarray(b, jnp.float32)
+                   * ((LOG2_HI - LOG2_LO) / NBINS))
+
+
+def threshold_from_histogram(energies: jax.Array, eps: float) -> jax.Array:
+    """Largest bin edge whose below-edge cumulative energy <= eps^2 * total.
+
+    Discarding every |y| < t then provably discards <= budget (bin b holds
+    magnitudes in [edge(b), edge(b+1)), so everything below edge(c) is exactly
+    the bins < c).
+    """
+    total = jnp.sum(energies)
+    budget = (eps * eps) * total
+    below = jnp.concatenate([jnp.zeros(1), jnp.cumsum(energies)])  # below edge b
+    ok = below[:NBINS + 1] <= budget + 1e-30
+    c = jnp.sum(ok.astype(jnp.int32)) - 1          # last edge still within budget
+    t = bin_edge(c)
+    return jnp.where(c <= 0, 0.0, t)
+
+
+def threshold_by_sort(y: jax.Array, eps: float) -> jax.Array:
+    """The paper's GPU approach (F7): sort |y| and walk the energy CDF.
+
+    Returns the *optimal* threshold: the magnitude of the smallest coefficient
+    that must still be kept so that discarded energy <= eps^2 * total.
+    """
+    a = jnp.sort(jnp.abs(y.reshape(-1)))           # ascending
+    e = a * a
+    cum = jnp.cumsum(e)
+    total = cum[-1]
+    budget = (eps * eps) * total
+    # keep everything above the largest prefix whose energy fits the budget
+    n_drop = jnp.sum((cum <= budget).astype(jnp.int32))
+    t = jnp.where(n_drop >= a.shape[0], jnp.inf, a[jnp.minimum(n_drop, a.shape[0] - 1)])
+    return jnp.where(n_drop == 0, 0.0, t)
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+def quantize_blocks(y: jax.Array, t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Zero sub-threshold coeffs, int8-quantize survivors per block."""
+    kept = jnp.where(jnp.abs(y) >= t, y, 0.0)
+    amax = jnp.max(jnp.abs(kept), axis=-1)                  # (n_blocks,)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(kept / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end oracle codec
+# ---------------------------------------------------------------------------
+
+def compress(x: jax.Array, eps: float = 1e-2, *,
+             selector: str = "histogram") -> Compressed:
+    xb, n = blockize(x)
+    y = dct_blocks(xb)
+    if selector == "histogram":
+        _, energies = energy_histogram(y)
+        t = threshold_from_histogram(energies, eps)
+    elif selector == "sort":
+        t = threshold_by_sort(y, eps)
+    else:
+        raise ValueError(f"unknown selector {selector!r}")
+    q, scale = quantize_blocks(y, t)
+    return Compressed(q, scale, n, tuple(x.shape), x.dtype)
+
+
+def decompress(c: Compressed) -> jax.Array:
+    y = dequantize_blocks(c.q, c.scale)
+    xb = idct_blocks(y)
+    return unblockize(xb, c.n_elements, c.shape, c.dtype)
+
+
+def rel_l2_error(x: jax.Array, xhat: jax.Array) -> float:
+    num = jnp.linalg.norm((x - xhat).astype(jnp.float32).reshape(-1))
+    den = jnp.linalg.norm(x.astype(jnp.float32).reshape(-1))
+    return float(num / jnp.maximum(den, 1e-30))
+
+
+def kept_fraction(c: Compressed) -> float:
+    return float(jnp.mean((c.q != 0).astype(jnp.float32)))
+
+
+def error_bound(eps: float) -> float:
+    """Combined guarantee: threshold (<= eps) + int8 quantization.
+
+    Quantization adds per-block L2 error <= (scale/2) * sqrt(B); with
+    scale = max|y_b|/127 this is <= ||y_b|| * sqrt(B)/254 relative per block.
+    The combined relative-L2 bound used by tests:
+    """
+    quant = math.sqrt(BLOCK) / 254.0
+    return eps + quant

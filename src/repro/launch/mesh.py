@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS *before* the first jax call; smoke
+tests and benches must keep seeing one CPU device).
+
+Mesh topology:
+  single-pod : (16, 16)    axes ('data', 'model')   — 256 chips, fast ICI
+  multi-pod  : (2, 16, 16) axes ('pod', 'data', 'model') — 2 pods over DCI
+
+'pod' is the slow inter-pod axis: the sharding rules keep parameters off it
+(pure DP), and the optional int8 gradient ring (optim/grad_compress) shrinks
+its wire bytes. 'data' carries FSDP + batch, 'model' carries TP/EP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (CPU) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,89 @@
+"""Serving driver: batched-request serving with in-situ tasks attached.
+
+Runs the ServingEngine on a smoke config (CPU) or lowers the full-config
+decode step for the production mesh (see dryrun.py for the mesh pass). The
+in-situ engine attaches the paper's tasks to the *serving* loop: per-step KV
+cache statistics (the "image") and periodic compressed serving-state
+snapshots (prefix-cache persistence — the serving analog of checkpointing).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as configs
+from repro.core import InSituEngine, InSituMode, InSituTask, Telemetry
+from repro.core import analysis, codecs
+from repro.models import params as P_lib
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+
+
+def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
+               slots: int = 4, insitu_mode: str = "async",
+               seed: int = 0, log=print) -> dict:
+    cfg = configs.get(arch, smoke=True)
+    params = P_lib.materialize(jax.random.PRNGKey(seed),
+                               transformer.param_spec(cfg))
+    engine = ServingEngine(cfg, params, slots=slots, prompt_len=16,
+                           max_len=64)
+    tm = Telemetry()
+    mode = InSituMode(insitu_mode)
+
+    def snapshot_task(step, payload):
+        flat = jax.tree_util.tree_flatten(payload)[0]
+        blob, st = codecs.encode(np.asarray(flat[0]).ravel()[:65536], "zlib")
+        return st.ratio
+
+    insitu = InSituEngine(
+        [InSituTask("kv_snapshot", "serving_state", snapshot_task,
+                    mode=mode, every=4)],
+        p_i=2, telemetry=tm)
+
+    rng = np.random.default_rng(seed)
+    requests = [
+        Request(i, rng.integers(0, cfg.vocab_size, size=16), max_new=max_new)
+        for i in range(n_requests)]
+
+    pending = list(requests)
+    step = 0
+    t0 = time.perf_counter()
+    while pending or any(a is not None for a in engine.active):
+        while pending and engine.admit(pending[0]):
+            pending.pop(0)
+        if any(a is not None for a in engine.active):
+            with tm.span("step/compute", step=step):
+                engine.step()
+            insitu.on_step(step, engine.insitu_providers())
+        step += 1
+        if step > 10000:
+            break
+    insitu.finish()
+    total = time.perf_counter() - t0
+    done = sum(1 for r in requests if r.done)
+    toks = sum(len(r.out) for r in requests)
+    log(f"served {done}/{len(requests)} requests, {toks} tokens "
+        f"in {total:.2f}s ({toks / max(total, 1e-9):.1f} tok/s), "
+        f"insitu results={len(insitu.results)}")
+    return {"requests": requests, "telemetry": tm, "steps": step,
+            "insitu_results": len(insitu.results), "tok_per_s": toks / total}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=list(configs.ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--insitu", default="async",
+                    choices=["sync", "async", "hybrid"])
+    args = ap.parse_args()
+    serve_loop(args.arch, n_requests=args.requests, max_new=args.max_new,
+               insitu_mode=args.insitu)
+
+
+if __name__ == "__main__":
+    main()

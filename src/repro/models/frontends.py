@@ -1,0 +1,30 @@
+"""Modality frontend STUBS (per the assignment brief).
+
+The [audio] and [vlm] archs specify the transformer BACKBONE only; the EnCodec
+frame encoder / InternViT patch encoder are not reproduced. ``input_specs()``
+therefore provides *precomputed* frame/patch embeddings of shape
+(batch, frontend_tokens, d_model), and these modules only splice them into the
+token-embedding stream (prefix position) and keep the loss off prefix slots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def splice_prefix(token_embeds: jax.Array, prefix_embeds: jax.Array):
+    """Prepend modality embeddings; returns (hidden, loss_mask)."""
+    b, s_tok, d = token_embeds.shape
+    s_pre = prefix_embeds.shape[1]
+    h = jnp.concatenate([prefix_embeds.astype(token_embeds.dtype),
+                         token_embeds], axis=1)
+    mask = jnp.concatenate(
+        [jnp.zeros((b, s_pre), jnp.float32), jnp.ones((b, s_tok), jnp.float32)],
+        axis=1)
+    return h, mask
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    return (batch, cfg.frontend_tokens, cfg.d_model)

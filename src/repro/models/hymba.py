@@ -1,0 +1,59 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads, fused output.
+
+Each block runs a (sliding-window or global) attention branch and a Mamba-style
+SSM branch on the same normed input; the two branch outputs are normalized and
+mean-fused with learned per-channel gains (the Hymba fusion), then a SwiGLU FFN
+follows. 29/32 layers use sliding-window attention; 3 are global — which is
+what makes the long_500k decode shape viable (bounded ring KV for SWA layers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+
+def global_layer_ids(cfg: ModelConfig) -> tuple:
+    """First / middle / last layers are global-attention (Hymba placement)."""
+    n = cfg.n_layers
+    g = cfg.n_global_layers
+    if g <= 0:
+        return ()
+    if g == 1:
+        return (0,)
+    if g == 2:
+        return (0, n - 1)
+    return (0, n // 2, n - 1) if g == 3 else tuple(
+        round(i * (n - 1) / (g - 1)) for i in range(g))
+
+
+def fusion_spec(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d = cfg.d_model
+
+    def mk(shape, axes, **kw):
+        if layers is not None:
+            shape = (layers,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, **kw)
+
+    return {
+        "attn_norm": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "ssm_norm": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "attn_gain": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "ssm_gain": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+    }
+
+
+def fuse(pf, attn_out, ssm_out, cfg: ModelConfig):
+    a = rmsnorm({"scale": pf["attn_norm"]}, attn_out, cfg.norm_eps)
+    s = rmsnorm({"scale": pf["ssm_norm"]}, ssm_out, cfg.norm_eps)
+    out = 0.5 * (a.astype(jnp.float32) * pf["attn_gain"]
+                 + s.astype(jnp.float32) * pf["ssm_gain"])
+    return out.astype(attn_out.dtype)

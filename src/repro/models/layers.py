@@ -1,0 +1,129 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, embeddings, RoPE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int, layers: Optional[int] = None) -> dict:
+    shape = (dim,) if layers is None else (layers, dim)
+    axes = ("embed",) if layers is None else ("layers", "embed")
+    return {"scale": ParamSpec(shape, axes, jnp.float32, init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, layers: Optional[int] = None) -> dict:
+    def mk(shape, axes):
+        if layers is not None:
+            shape = (layers,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes)
+
+    return {
+        "w_gate": mk((d_model, d_ff), ("embed", "mlp")),
+        "w_up": mk((d_model, d_ff), ("embed", "mlp")),
+        "w_down": mk((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded vocab; pad logits masked to -inf)
+# ---------------------------------------------------------------------------
+
+def embed_spec(padded_vocab: int, d_model: int, tie: bool) -> dict:
+    out = {"embedding": ParamSpec((padded_vocab, d_model), ("vocab", "embed"),
+                                  init="embed", scale=0.02)}
+    if not tie:
+        out["unembed"] = ParamSpec((d_model, padded_vocab), ("embed", "vocab"))
+    return out
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array, vocab_size: int) -> jax.Array:
+    if "unembed" in params:
+        logits = jnp.einsum("...d,dv->...v", x, params["unembed"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, params["embedding"])
+    padded = logits.shape[-1]
+    if padded != vocab_size:
+        mask = jnp.arange(padded) < vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  gather_free: bool = False) -> jax.Array:
+    """Mean token cross-entropy; labels < vocab_size always (pad rows masked).
+
+    ``gather_free`` selects a compare+reduce formulation (no gather op) —
+    required inside partially-manual shard_map regions, where XLA's SPMD
+    partitioner cannot partition gathers with sharded operands (hard CHECK
+    in spmd_partitioner_util as of XLA 2025-xx); the compare+sum fuses into
+    a single reduction loop and never materializes the one-hot.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if gather_free:
+        vocab_iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                       axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,118 @@
+"""Functional parameter system with logical sharding axes.
+
+Every model in this framework describes its parameters as a pytree of
+``ParamSpec`` (shape + dtype + logical axis names + initializer). From one
+spec tree we derive:
+
+  * ``materialize(rng, spec)``   -> real jnp arrays (smoke tests, examples)
+  * ``abstract(spec)``           -> jax.ShapeDtypeStruct tree (dry-run, no alloc)
+  * ``logical_axes(spec)``       -> pytree of logical-axis tuples
+  * with ``distributed.sharding.mesh_rules`` -> PartitionSpec tree for pjit.
+
+Logical axis vocabulary (see distributed/sharding.py for the mesh mapping):
+  'vocab'    embedding rows / logits columns          (TP)
+  'embed'    model dimension                          (FSDP)
+  'heads'    query heads                              (TP)
+  'kv_heads' key/value heads                          (TP if divisible)
+  'head_dim' per-head feature dim                     (never sharded)
+  'mlp'      feed-forward hidden                      (TP)
+  'expert'   MoE expert index                         (EP -> TP axis)
+  'e_mlp'    per-expert hidden                        (unsharded; EP covers it)
+  'layers'   scan-stacked layer index                 (never sharded)
+  'lora'     MLA low-rank bottleneck                  (never sharded)
+  'state'    SSM / recurrent state dim                (never sharded)
+  'conv'     conv kernel taps                         (never sharded)
+  None       explicitly replicated dim
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names, len(axes) == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed | head
+    scale: float | None = None  # overrides the default fan-in scale
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape={self.shape} axes={self.axes}"
+            )
+
+
+def _fan_in(shape: tuple, axes: tuple) -> int:
+    """Fan-in ignoring a leading stacked-layers dim."""
+    dims = [s for s, a in zip(shape, axes) if a != "layers"]
+    if len(dims) <= 1:
+        return max(dims[0] if dims else 1, 1)
+    # all but the last dim count as inputs for a dense kernel
+    return max(int(np.prod(dims[:-1])), 1)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(
+            spec.dtype
+        )
+    # dense kernels: truncated-normal, 1/sqrt(fan_in)
+    scale = spec.scale
+    if scale is None:
+        scale = 1.0 / math.sqrt(_fan_in(spec.shape, spec.axes))
+    x = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    return (x * scale).astype(spec.dtype)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(rng: jax.Array, spec_tree: PyTree) -> PyTree:
+    """Initialize real parameters from a spec tree."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(spec_tree: PyTree) -> PyTree:
+    """ShapeDtypeStruct stand-ins — used by the dry-run; allocates nothing."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def logical_axes(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree: PyTree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(spec_tree: PyTree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves
+    )
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,183 @@
+"""Selective SSM (Mamba-style) mixer: chunked parallel scan + O(1) decode.
+
+Training/prefill uses a chunked associative scan: the sequence is cut into
+`chunk`-sized pieces; within a chunk the linear recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+is evaluated with lax.associative_scan (log-depth, VPU-friendly), and a single
+(d_inner, d_state) state is carried across chunks — so live memory is
+O(chunk * d_inner * d_state), never O(seq * ...). Decode is the exact
+single-step recurrence on the carried state (this is what makes the long_500k
+shape viable for the hybrid/ssm archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.params import ParamSpec
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def ssm_spec(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner(cfg)
+    r = _dt_rank(cfg)
+
+    def mk(shape, axes, **kw):
+        if layers is not None:
+            shape = (layers,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, **kw)
+
+    return {
+        "in_proj": mk((d, 2 * di), ("embed", "mlp")),
+        "conv_w": mk((s.d_conv, di), ("conv", "mlp")),
+        "conv_b": mk((di,), ("mlp",), init="zeros"),
+        "x_proj": mk((di, r + 2 * s.d_state), ("mlp", "lora")),
+        "dt_proj": mk((r, di), ("lora", "mlp")),
+        "dt_bias": mk((di,), ("mlp",), dtype=jnp.float32, init="zeros"),
+        "a_log": mk((di, s.d_state), ("mlp", "state"), dtype=jnp.float32,
+                    init="embed", scale=0.5),
+        "d_skip": mk((di,), ("mlp",), dtype=jnp.float32, init="ones"),
+        "out_proj": mk((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """x: (B,L,di); depthwise causal conv with kernel taps w: (K,di)."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):]  # (B,L,di), new conv state
+
+
+def _ssm_inputs(p, xc, cfg: ModelConfig):
+    """Projections shared by the parallel and decode paths."""
+    s = cfg.ssm
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("...d,de->...e", xc, p["x_proj"])
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jnp.einsum("...r,rd->...d", dt_r, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])               # (..., di)
+    a = -jnp.exp(p["a_log"])                              # (di, S)
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32), a
+
+
+def _scan_chunk(h0, dt, bmat, cmat, a, xc):
+    """One chunk of the selective scan. h0: (B,di,S); xc: (B,L,di)."""
+    da = jnp.exp(dt[..., None] * a)                        # (B,L,di,S)
+    db = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    cum_a, cum_b = jax.lax.associative_scan(combine, (da, db), axis=1)
+    h = cum_a * h0[:, None] + cum_b                        # (B,L,di,S)
+    y = jnp.einsum("blds,bls->bld", h, cmat)
+    return y, h[:, -1]
+
+
+def ssm_mixer(p, x, cfg: ModelConfig, return_state: bool = False):
+    """x: (B, L, d_model) -> (B, L, d_model). Parallel (train/prefill) path."""
+    s = cfg.ssm
+    b, l, _ = x.shape
+    di = d_inner(cfg)
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    chunk = min(s.chunk, l)
+    if l % chunk:
+        chunk = l
+    n_chunks = l // chunk
+    xcs = xc.reshape(b, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    def body(h, xck):
+        dt, bmat, cmat, a = _ssm_inputs(p, xck, cfg)
+        y, h_new = _scan_chunk(h, dt, bmat, cmat, a, xck)
+        return h_new, y
+
+    h0 = jnp.zeros((b, di, s.d_state), jnp.float32)
+    if cfg.unroll_scans:
+        h_final, ys_l = h0, []
+        for i in range(n_chunks):
+            h_final, y_i = body(h_final, xcs[i])
+            ys_l.append(y_i)
+        ys = jnp.stack(ys_l)
+    else:
+        h_final, ys = jax.lax.scan(body, h0, xcs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, di)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    if return_state:
+        return out, {"h": h_final, "conv": conv_state}
+    return out
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = d_inner(cfg)
+    return {
+        "h": (batch, di, s.d_state),
+        "conv": (batch, s.d_conv - 1, di),
+    }
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state):
+    """Single-token recurrence. x: (B,1,d); state: {'h','conv'}."""
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, bmat, cmat, a = _ssm_inputs(p, xc, cfg)
+    da = jnp.exp(dt[:, 0, :, None] * a)                    # (B,di,S)
+    db = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h = da * state["h"] + db
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def ssm_mixer_reference(p, x, cfg: ModelConfig):
+    """Naive per-step recurrence oracle (tests)."""
+    b, l, _ = x.shape
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xc, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, bmat, cmat, a = _ssm_inputs(p, xc, cfg)
+    di = d_inner(cfg)
+    h = jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)
+    ys = []
+    for t in range(l):
+        da = jnp.exp(dt[:, t, :, None] * a)
+        db = (dt[:, t] * xc[:, t].astype(jnp.float32))[..., None] * bmat[:, t, None, :]
+        h = da * h + db
+        ys.append(jnp.einsum("bds,bs->bd", h, cmat[:, t]))
+    y = jnp.stack(ys, axis=1)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"])

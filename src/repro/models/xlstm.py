@@ -1,0 +1,345 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM.
+
+mLSTM (matrix memory, exponential gating) is evaluated in an exact chunkwise
+form. With log-gates lf_t = log sigmoid(f~_t), li_t = i~_t and within-chunk
+cumulative decay b_t = sum_{s<=t} lf_s, the stepwise stabilizer unrolls to
+
+    m_t = b_t + max(m_in, cummax_{s<=t}(li_s - b_s))
+
+and every stepwise quantity becomes an einsum against the (L,L) intra-chunk
+weight matrix W_{ts} = exp(b_t - b_s + li_s - m_t) [s<=t] plus one inter-chunk
+term exp(b_t + m_in - m_t) carried by the chunk state (C, n, m). Tests verify
+chunkwise == stepwise to float tolerance. Chunk size bounds live memory at
+O(L^2 + d_head^2) per head — the structure a TPU kernel would tile.
+
+sLSTM (scalar memory, block-diagonal recurrence) is inherently sequential and
+runs as a lax.scan over time; xLSTM-1.3b places one sLSTM block per 8 blocks,
+so the scan cost is amortized 1:7 against parallel mLSTM blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+NEG = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(x.m_proj_factor * d)      # mLSTM inner width
+    nh = cfg.n_heads
+    dh = di // nh
+    return d, di, nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d, di, nh, dh = _dims(cfg)
+    k = cfg.xlstm.conv_kernel
+
+    def mk(shape, axes, **kw):
+        if layers is not None:
+            shape = (layers,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, **kw)
+
+    return {
+        "ln": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "up": mk((d, 2 * di), ("embed", "mlp")),
+        "conv_w": mk((k, di), ("conv", "mlp")),
+        "conv_b": mk((di,), ("mlp",), init="zeros"),
+        "wq": mk((di, di), ("mlp", "mlp")),
+        "wk": mk((di, di), ("mlp", "mlp")),
+        "wv": mk((di, di), ("mlp", "mlp")),
+        "wif": mk((di, 2 * nh), ("mlp", "heads"), dtype=jnp.float32),
+        "b_if": mk((2 * nh,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "gn": mk((di,), ("mlp",), dtype=jnp.float32, init="ones"),
+        "down": mk((di, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkvgates(p, x_in, cfg, conv_state=None):
+    """Shared projections. x_in: (B,L,d) already layer-normed."""
+    from repro.models.ssm import _causal_conv
+
+    d, di, nh, dh = _dims(cfg)
+    xz = jnp.einsum("bld,de->ble", x_in, p["up"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x_in.dtype)
+    b, l = x_in.shape[:2]
+    q = jnp.einsum("ble,ef->blf", xc, p["wq"]).reshape(b, l, nh, dh)
+    k = jnp.einsum("ble,ef->blf", xc, p["wk"]).reshape(b, l, nh, dh)
+    v = jnp.einsum("ble,ef->blf", xm, p["wv"]).reshape(b, l, nh, dh)
+    gates = jnp.einsum("ble,eg->blg", xm.astype(jnp.float32), p["wif"])
+    gates = gates + p["b_if"]
+    li = gates[..., :nh]                                   # (B,L,nh) log input
+    lf = jax.nn.log_sigmoid(gates[..., nh:])               # (B,L,nh) log forget
+    k = k / math.sqrt(dh)
+    return q, k, v, li, lf, z, new_conv
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """Exact chunkwise mLSTM. q,k,v: (B,L,nh,dh); li,lf: (B,L,nh).
+
+    state: (C (B,nh,dh,dh), n (B,nh,dh), m (B,nh)) stabilized.
+    Returns (h (B,L,nh,dh), new state).
+    """
+    c_in, n_in, m_in = state
+    bsz, l, nh, dh = q.shape
+    b = jnp.cumsum(lf, axis=1)                             # (B,L,nh)
+    # per-position stabilizer
+    intra_max = jax.lax.cummax(li - b, axis=1)
+    m_t = b + jnp.maximum(m_in[:, None, :], intra_max)     # (B,L,nh)
+    # intra-chunk weights W[t,s] = exp(b_t - b_s + li_s - m_t), s<=t
+    lw = (b[:, :, None, :] - b[:, None, :, :]
+          + li[:, None, :, :] - m_t[:, :, None, :])        # (B,t,s,nh)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.exp(jnp.where(causal[None, :, :, None], lw, NEG))
+    scores = jnp.einsum("blhd,bshd->blsh", q, k)           # (B,t,s,nh)
+    h_intra = jnp.einsum("blsh,blsh,bshd->blhd",
+                         scores.astype(jnp.float32), w,
+                         v.astype(jnp.float32))
+    den_intra = jnp.einsum("blsh,blsh->blh", scores.astype(jnp.float32), w)
+    # inter-chunk term
+    w_inter = jnp.exp(b + m_in[:, None, :] - m_t)          # (B,L,nh)
+    h_inter = jnp.einsum("blhd,bhde->blhe", q.astype(jnp.float32),
+                         c_in) * w_inter[..., None]
+    den_inter = jnp.einsum("blhd,bhd->blh", q.astype(jnp.float32),
+                           n_in) * w_inter
+    num = h_intra + h_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # chunk-final state (stepwise state at t=L)
+    m_out = m_t[:, -1, :]                                  # (B,nh)
+    wc = jnp.exp(b[:, -1:, :] - b + li - m_out[:, None, :])  # (B,s,nh)
+    c_out = (jnp.exp(b[:, -1, :] + m_in - m_out)[:, :, None, None] * c_in
+             + jnp.einsum("bsh,bshd,bshe->bhde", wc,
+                          k.astype(jnp.float32), v.astype(jnp.float32)))
+    n_out = (jnp.exp(b[:, -1, :] + m_in - m_out)[:, :, None] * n_in
+             + jnp.einsum("bsh,bshd->bhd", wc, k.astype(jnp.float32)))
+    return h.astype(q.dtype), (c_out, n_out, m_out)
+
+
+def mlstm_mixer(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence mLSTM via chunk scan. x: (B,L,d) pre-norm residual input."""
+    d, di, nh, dh = _dims(cfg)
+    x_in = rmsnorm({"scale": p["ln"]}, x, cfg.norm_eps)
+    q, k, v, li, lf, z, conv_state = _mlstm_qkvgates(p, x_in, cfg)
+    bsz, l = x.shape[:2]
+    chunk = min(cfg.xlstm.chunk, l)
+    if l % chunk:
+        chunk = l
+    n_chunks = l // chunk
+
+    def split(t):
+        return t.reshape(bsz, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lis, lfs = map(split, (q, k, v, li, lf))
+
+    def body(state, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state)
+        return state, h
+
+    state0 = (
+        jnp.zeros((bsz, nh, dh, dh), jnp.float32),
+        jnp.zeros((bsz, nh, dh), jnp.float32),
+        jnp.full((bsz, nh), NEG, jnp.float32),
+    )
+    if cfg.unroll_scans:
+        state_f, hs_l = state0, []
+        for i in range(n_chunks):
+            state_f, h_i = body(state_f, (qs[i], ks[i], vs[i], lis[i],
+                                          lfs[i]))
+            hs_l.append(h_i)
+        hs = jnp.stack(hs_l)
+    else:
+        state_f, hs = jax.lax.scan(body, state0, (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(bsz, l, di)
+    h = _groupnorm(h, p["gn"], nh, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = x + jnp.einsum("ble,ed->bld", h, p["down"])
+    if return_state:
+        c, n, m = state_f
+        return out, {"c": c, "n": n, "m": m, "conv": conv_state}
+    return out
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int):
+    d, di, nh, dh = _dims(cfg)
+    k = cfg.xlstm.conv_kernel
+    return {
+        "c": (batch, nh, dh, dh),
+        "n": (batch, nh, dh),
+        "m": (batch, nh),
+        "conv": (batch, k - 1, di),
+    }
+
+
+def mlstm_decode(p, x, cfg: ModelConfig, state):
+    """Single-step mLSTM. x: (B,1,d)."""
+    d, di, nh, dh = _dims(cfg)
+    x_in = rmsnorm({"scale": p["ln"]}, x, cfg.norm_eps)
+    q, k, v, li, lf, z, conv = _mlstm_qkvgates(
+        p, x_in, cfg, conv_state=state["conv"])
+    h, (c, n, m) = _mlstm_chunk(
+        q, k, v, li, lf, (state["c"], state["n"], state["m"]))
+    h = h.reshape(x.shape[0], 1, di)
+    h = _groupnorm(h, p["gn"], nh, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = x + jnp.einsum("ble,ed->bld", h, p["down"])
+    return out, {"c": c, "n": n, "m": m, "conv": conv}
+
+
+def _groupnorm(h, scale, nh, eps):
+    bsz, l, di = h.shape
+    dh = di // nh
+    hf = h.astype(jnp.float32).reshape(bsz, l, nh, dh)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.var(hf, axis=-1, keepdims=True)
+    hf = (hf - mu) * jax.lax.rsqrt(var + eps)
+    return (hf.reshape(bsz, l, di) * scale).astype(h.dtype)
+
+
+def mlstm_mixer_reference(p, x, cfg: ModelConfig):
+    """Stepwise oracle for the chunkwise form (tests)."""
+    d, di, nh, dh = _dims(cfg)
+    x_in = rmsnorm({"scale": p["ln"]}, x, cfg.norm_eps)
+    q, k, v, li, lf, z, _ = _mlstm_qkvgates(p, x_in, cfg)
+    bsz, l = x.shape[:2]
+    c = jnp.zeros((bsz, nh, dh, dh), jnp.float32)
+    n = jnp.zeros((bsz, nh, dh), jnp.float32)
+    m = jnp.full((bsz, nh), NEG, jnp.float32)
+    hs = []
+    for t in range(l):
+        m_new = jnp.maximum(lf[:, t] + m, li[:, t])
+        fs = jnp.exp(lf[:, t] + m - m_new)
+        is_ = jnp.exp(li[:, t] - m_new)
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, t].astype(jnp.float32),
+                        v[:, t].astype(jnp.float32))
+        c = fs[..., None, None] * c + is_[..., None, None] * kv
+        n = fs[..., None] * n + is_[..., None] * k[:, t].astype(jnp.float32)
+        m = m_new
+        num = jnp.einsum("bhd,bhde->bhe", q[:, t].astype(jnp.float32), c)
+        den = jnp.einsum("bhd,bhd->bh", q[:, t].astype(jnp.float32), n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        hs.append(h.reshape(bsz, di))
+    h = jnp.stack(hs, axis=1).astype(x.dtype)
+    h = _groupnorm(h, p["gn"], nh, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return x + jnp.einsum("ble,ed->bld", h, p["down"])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    df = int(cfg.xlstm.s_proj_factor * d)
+
+    def mk(shape, axes, **kw):
+        if layers is not None:
+            shape = (layers,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, **kw)
+
+    return {
+        "ln": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "w_gates": mk((d, 4 * d), ("embed", "mlp")),       # i,f,z,o input proj
+        "r_gates": mk((4, nh, dh, dh), (None, "heads", "head_dim", "head_dim"),
+                      scale=1.0 / math.sqrt(dh)),
+        "b_gates": mk((4 * d,), ("mlp",), dtype=jnp.float32, init="zeros"),
+        "gn": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        # post-mixer gated FFN (factor 4/3)
+        "ffn_ln": mk((d,), ("embed",), dtype=jnp.float32, init="ones"),
+        "ffn_gate": mk((d, df), ("embed", "mlp")),
+        "ffn_up": mk((d, df), ("embed", "mlp")),
+        "ffn_down": mk((df, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_step(p, cfg, gx, state):
+    """gx: (B,4d) PRE-PROJECTED gate inputs; state: dict(c,n,m,h) (B,nh,dh).
+
+    The input projection x_t @ W_gates is hoisted OUT of the time scan (it
+    has no state dependence): one big (B,L,d)@(d,4d) matmul feeds the MXU
+    before the recurrence, and only the per-head recurrent term + gating
+    elementwise stay sequential. This is the TPU-correct formulation and
+    keeps the in-loop flops to the irreducible recurrent part.
+    """
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    gx = gx.astype(jnp.float32)
+    gr = jnp.einsum("bhd,ghde->gbhe", h.astype(p["r_gates"].dtype),
+                    p["r_gates"]).astype(jnp.float32)
+    gi, gf, gz, go = [gx[:, i * d:(i + 1) * d].reshape(-1, nh, dh) + gr[i]
+                      for i in range(4)]
+    m_new = jnp.maximum(gf + m, gi)
+    fs = jnp.exp(gf + m - m_new)
+    is_ = jnp.exp(gi - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = fs * c + is_ * z
+    n_new = fs * n + is_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new,
+            "h": h_new.astype(state["h"].dtype)}
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    s = (batch, nh, dh)
+    return {"c": s, "n": s, "m": s, "h": s}
+
+
+def slstm_mixer(p, x, cfg: ModelConfig, state=None):
+    """Sequential sLSTM over (B,L,d); returns (y, final state)."""
+    bsz, l, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    x_in = rmsnorm({"scale": p["ln"]}, x, cfg.norm_eps)
+    if state is None:
+        z = jnp.zeros((bsz, nh, dh), jnp.float32)
+        state = {"c": z, "n": z, "m": z - 1e30, "h": z.astype(x.dtype)}
+
+    # hoisted input projection: one matmul for all timesteps (MXU-friendly)
+    gx_all = jnp.einsum("bld,de->ble", x_in, p["w_gates"]) + p["b_gates"]
+
+    def body(st, gx_t):
+        st = _slstm_step(p, cfg, gx_t, st)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(body, state, gx_all.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(bsz, l, d).astype(x.dtype)
+    h = _groupnorm(h, p["gn"], nh, cfg.norm_eps)
+    y = x + h
+    # post FFN
+    yn = rmsnorm({"scale": p["ffn_ln"]}, y, cfg.norm_eps)
+    g = jnp.einsum("bld,df->blf", yn, p["ffn_gate"])
+    u = jnp.einsum("bld,df->blf", yn, p["ffn_up"])
+    hf = jax.nn.gelu(g.astype(jnp.float32)).astype(y.dtype) * u
+    y = y + jnp.einsum("blf,fd->bld", hf, p["ffn_down"])
+    return y, state
+
+
+def slstm_decode(p, x, cfg: ModelConfig, state):
+    y, state = slstm_mixer(p, x, cfg, state)
+    return y, state

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update
+from repro.optim import schedules, grad_compress
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "schedules",
+           "grad_compress"]

@@ -1,0 +1,88 @@
+"""Cross-pod gradient compression (beyond-paper; the paper's codec idea
+applied to the collective layer).
+
+The multi-pod mesh's 'pod' axis rides the slow inter-pod link, so the
+cross-pod gradient all-reduce is the collective-bound roofline term of
+multi-pod training. This module shrinks its wire bytes:
+
+  none  : plain psum (autodiff default) — f32/bf16 operands
+  bf16  : pmean on bf16 operands (2x vs f32)
+  int8  : error-feedback int8 ring all-reduce — a shared global scale (one
+          scalar pmax) quantizes each pod's local gradient to int8; a
+          ppermute ring exchanges *int8* payloads (visible as 1-byte
+          collective-permute operands in the compiled HLO — 4x fewer wire
+          bytes than f32, 2x fewer than bf16), accumulating locally in f32.
+
+Usage: the train step wraps its grad computation in a *partially-manual*
+``jax.shard_map`` (manual over 'pod' only, 'data'/'model' stay automatic).
+Within-pod reductions stay exact psums on fast ICI; only the slow axis is
+compressed. The quantization residual is returned for error feedback (the
+EF-SGD argument: compression error is delayed, not dropped, so it does not
+bias convergence).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+PyTree = Any
+
+METHODS = ("none", "bf16", "int8")
+
+
+def pod_size(mesh: Mesh, axis: str = "pod") -> int:
+    if axis not in mesh.axis_names:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def int8_ring_mean(x: jax.Array, axis: str, n: int) -> jax.Array:
+    """Mean over manual mesh axis ``axis``; int8 payloads on the wire."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)          # tiny f32 collective
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    acc = q.astype(jnp.float32)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    buf = q
+    for _ in range(n - 1):
+        buf = jax.lax.ppermute(buf, axis, perm)             # int8 on the wire
+        acc = acc + buf.astype(jnp.float32)
+    return acc * (scale / n)
+
+
+def reduce_leaf(g: jax.Array, *, method: str, axis: str, n: int) -> jax.Array:
+    """Cross-pod mean of one gradient leaf inside a manual-over-pod region."""
+    if method == "none" or n <= 1:
+        return jax.lax.pmean(g, axis)
+    if method == "bf16":
+        return jax.lax.pmean(g.astype(jnp.bfloat16), axis).astype(g.dtype)
+    if method == "int8":
+        return int8_ring_mean(g.astype(jnp.float32), axis, n).astype(g.dtype)
+    raise ValueError(f"unknown grad-compression method {method!r}")
+
+
+def tree_reduce(grads: PyTree, *, method: str, axis: str, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda g: reduce_leaf(g, method=method, axis=axis, n=n), grads)
+
+
+# -- error feedback ------------------------------------------------------------
+
+def ef_init(params: PyTree) -> PyTree:
+    """Residual buffer, bf16 (it stores already-small quantization leftovers)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def ef_pre(grads: PyTree, residual: PyTree) -> PyTree:
+    """Add the carried residual before compression."""
+    return jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, residual)
+
+
+def ef_post(grads_pre: PyTree, grads_reduced: PyTree) -> PyTree:
+    """New residual = information the compressed reduction lost this step."""
+    return jax.tree.map(
+        lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
+        .astype(jnp.bfloat16), grads_pre, grads_reduced)

@@ -1,0 +1,513 @@
+"""Serving: prefill + single-token decode for every assigned family.
+
+``make_prefill`` / ``make_decode`` build jit-able step functions with
+functional cache semantics:
+
+  prefill(params, tokens)                  -> (logits, cache, lengths)
+  decode (params, cache, tokens, lengths)  -> (logits, cache, lengths+1)
+
+Cache convention: ``lengths`` counts tokens already *in* the cache. Decode
+inserts the new token at slot ``lengths`` (ring slot ``lengths % window`` for
+SWA layers), attends over ``lengths+1`` entries, and returns ``lengths+1``.
+
+Decode is a lax.scan over (stacked layer params, stacked cache) pairs — one
+compiled block body regardless of depth, same trick as training. The
+ServingEngine below adds batched request slots on top (admit / step / drain),
+and exposes an in-situ provider (serving-state snapshots for the engine's
+compression tasks, the paper's checkpoint analog on the inference side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import hymba as hymba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import embed, mlp, rmsnorm, unembed
+from repro.models.transformer import project_qkv
+from repro.serving import kvcache
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-family decode blocks (x: (B,1,d))
+# ---------------------------------------------------------------------------
+
+def _insert_at(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """cache (B,S,...) <- new (B,...) at per-batch slot idx (B,)."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), idx].set(new.astype(cache.dtype))
+
+
+def _gqa_decode_attn(p, xn, cfg: ModelConfig, kv, lengths, *, window=0):
+    """kv: {'k','v'} (B,S,N,hd). Returns (attn_out, new kv)."""
+    ring = window > 0 and kv["k"].shape[1] == window
+    pos = lengths[:, None]                       # rope position of new token
+    q, k, v = project_qkv(p, xn, cfg, pos)
+    slot = lengths % kv["k"].shape[1] if ring else lengths
+    kc = _insert_at(kv["k"], k[:, 0], slot)
+    vc = _insert_at(kv["v"], v[:, 0], slot)
+    o = attn_lib.decode_attention(q, kc, vc, lengths + 1,
+                                  window=window, ring=ring)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": kc, "v": vc}
+
+
+def _mla_decode_attn(p, xn, cfg: ModelConfig, kv, lengths):
+    pos = lengths[:, None]
+    ckv_new, krope_new = mla_lib.mla_new_cache_entry(p, xn, cfg, pos)
+    ckv = _insert_at(kv["ckv"], ckv_new[:, 0], lengths)
+    krope = _insert_at(kv["krope"], krope_new[:, 0], lengths)
+    o = mla_lib.mla_decode(p, xn, cfg, ckv, krope, lengths + 1)
+    return o, {"ckv": ckv, "krope": krope}
+
+
+def _dense_decode_block(p, x, cfg, kv, lengths, *, window=0):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = _mla_decode_attn(p["attn"], xn, cfg, kv, lengths)
+    else:
+        a, kv = _gqa_decode_attn(p["attn"], xn, cfg, kv, lengths,
+                                 window=window)
+    x = x + a
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], xn), kv
+
+
+def _moe_decode_block(p, x, cfg, kv, lengths):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = _mla_decode_attn(p["attn"], xn, cfg, kv, lengths)
+    else:
+        a, kv = _gqa_decode_attn(p["attn"], xn, cfg, kv, lengths)
+    x = x + a
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y, _ = moe_lib.moe_ffn(p["moe"], xn, cfg)
+    return x + y, kv
+
+
+def _hybrid_decode_block(p, x, cfg, kv, ssm_state, lengths, *, window=0):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = _gqa_decode_attn(p["attn"], xn, cfg, kv, lengths, window=window)
+    s, ssm_state = ssm_lib.ssm_decode(p["ssm"], xn, cfg, ssm_state)
+    x = x + hymba_lib.fuse(p["fusion"], a, s, cfg)
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], xn), kv, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# decode step builders
+# ---------------------------------------------------------------------------
+
+def _maybe_scan(step, carry, xs, use_scan: bool):
+    """lax.scan or an unrolled python loop over the leading axis of xs."""
+    if use_scan:
+        return jax.lax.scan(step, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = step(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+def _scan_decode(stacked_params, cache, h, lengths, body, use_scan=True):
+    """Scan one block body over (params, cache) stacks; returns (h, cache)."""
+    def step(carry, xs):
+        p_layer, kv_layer = xs
+        carry, kv_new = body(carry, p_layer, kv_layer)
+        return carry, kv_new
+
+    h, new_cache = _maybe_scan(step, h, (stacked_params, cache), use_scan)
+    return h, new_cache
+
+
+def make_decode(cfg: ModelConfig) -> Callable:
+    """decode(params, cache, tokens (B,1), lengths (B,)) -> (logits, cache, lengths)."""
+
+    def decode(params, cache, tokens, lengths):
+        h = embed(params["embed"], tokens)
+
+        if cfg.family in ("dense", "audio", "vlm"):
+            body = lambda x, p, kv: _dense_decode_block(p, x, cfg, kv, lengths)
+            h, kv = _scan_decode(params["blocks"], cache["kv"], h, lengths,
+                                 body, use_scan=cfg.scan_layers)
+            cache = {"kv": kv}
+
+        elif cfg.family == "moe":
+            m = cfg.moe
+            new_cache = {}
+            kv = cache["kv"]
+            split = lambda t: (jax.tree.map(lambda a: a[:m.first_dense], t),
+                               jax.tree.map(lambda a: a[m.first_dense:], t))
+            kv_d, kv_m = split(kv) if m.first_dense else (None, kv)
+            if m.first_dense:
+                body_d = lambda x, p, k: _dense_decode_block(p, x, cfg, k, lengths)
+                h, kv_d = _scan_decode(params["dense_blocks"], kv_d, h,
+                                       lengths, body_d,
+                                       use_scan=cfg.scan_layers)
+            body_m = lambda x, p, k: _moe_decode_block(p, x, cfg, k, lengths)
+            h, kv_m = _scan_decode(params["moe_blocks"], kv_m, h, lengths,
+                                   body_m, use_scan=cfg.scan_layers)
+            joined = (jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                   kv_d, kv_m) if m.first_dense else kv_m)
+            cache = {"kv": joined}
+
+        elif cfg.family == "hybrid":
+            h, cache = _hybrid_decode(params, cfg, cache, h, lengths)
+
+        elif cfg.family == "ssm":
+            h, cache = _xlstm_decode(params, cfg, cache, h)
+
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg.vocab_size)
+        return logits, cache, lengths + 1
+
+    return decode
+
+
+def _hybrid_decode(params, cfg, cache, h, lengths):
+    gids = set(hymba_lib.global_layer_ids(cfg))
+    kinds = ["g" if i in gids else "s" for i in range(cfg.n_layers)]
+    g_idx = s_idx = 0
+    new_g_kv, new_s_kv, new_g_ssm, new_s_ssm = [], [], [], []
+    i = 0
+    while i < cfg.n_layers:
+        j = i
+        while j < cfg.n_layers and kinds[j] == kinds[i]:
+            j += 1
+        count = j - i
+        is_g = kinds[i] == "g"
+        idx0 = g_idx if is_g else s_idx
+        pkey = "global_blocks" if is_g else "swa_blocks"
+        kkey = "global_kv" if is_g else "swa_kv"
+        skey = "ssm_global" if is_g else "ssm_swa"
+        win = 0 if is_g else cfg.swa_window
+        part_p = jax.tree.map(lambda t: t[idx0:idx0 + count], params[pkey])
+        part_kv = jax.tree.map(lambda t: t[idx0:idx0 + count], cache[kkey])
+        part_ssm = jax.tree.map(lambda t: t[idx0:idx0 + count], cache[skey])
+
+        def step(carry, xs, win=win):
+            p_layer, kv_layer, ssm_layer = xs
+            x, kv, ssm = _hybrid_decode_block(
+                p_layer, carry, cfg, kv_layer, ssm_layer, lengths, window=win)
+            return x, (kv, ssm)
+
+        h, (kv_new, ssm_new) = _maybe_scan(
+            step, h, (part_p, part_kv, part_ssm), cfg.scan_layers)
+        (new_g_kv if is_g else new_s_kv).append(kv_new)
+        (new_g_ssm if is_g else new_s_ssm).append(ssm_new)
+        if is_g:
+            g_idx += count
+        else:
+            s_idx += count
+        i = j
+
+    cat = lambda parts: jax.tree.map(
+        lambda *xs: jnp.concatenate(xs), *parts) if len(parts) > 1 else parts[0]
+    cache = {"global_kv": cat(new_g_kv), "swa_kv": cat(new_s_kv),
+             "ssm_global": cat(new_g_ssm), "ssm_swa": cat(new_s_ssm)}
+    return h, cache
+
+
+def _xlstm_decode(params, cfg, cache, h):
+    def super_step(carry, xs):
+        p_super, st_super = xs
+
+        def m_step(c, mx):
+            p_layer, st_layer = mx
+            c, st_new = xlstm_lib.mlstm_decode(p_layer, c, cfg, st_layer)
+            return c, st_new
+
+        carry, m_new = _maybe_scan(
+            m_step, carry, (p_super["mlstm"], st_super["mlstm"]),
+            cfg.scan_layers)
+        carry, s_new = xlstm_lib.slstm_decode(
+            p_super["slstm"], carry, cfg, st_super["slstm"])
+        return carry, {"mlstm": m_new, "slstm": s_new}
+
+    h, new_state = _maybe_scan(
+        super_step, h, (params["super"], cache), cfg.scan_layers)
+    return h, new_state
+
+
+# ---------------------------------------------------------------------------
+# prefill builders (build the cache from a whole prompt)
+# ---------------------------------------------------------------------------
+
+def _gqa_prefill_attn(p, xn, cfg, positions, *, window, max_len):
+    q, k, v = project_qkv(p, xn, cfg, positions)
+    o = attn_lib.flash_attention(q, k, v, causal=True, window=window,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                 unroll=cfg.unroll_scans)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    b, s = xn.shape[:2]
+    if window and max_len == window:
+        # ring layout: keep the last ``window`` entries in ring order
+        # slot of token t is t % window; for a prompt of length s the ring
+        # holds tokens s-window..s-1 — rotate so slots line up.
+        t0 = max(0, s - window)
+        kr = k[:, t0:]
+        vr = v[:, t0:]
+        pad = window - kr.shape[1]
+        if pad:
+            kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vr = jnp.pad(vr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        shift = t0 % window
+        kr = jnp.roll(kr, shift, axis=1)
+        vr = jnp.roll(vr, shift, axis=1)
+        return out, {"k": kr, "v": vr}
+    pad = max_len - s
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, {"k": k, "v": v}
+
+
+def _mla_prefill_attn(p, xn, cfg, positions, *, max_len):
+    out = mla_lib.mla_attention(p, xn, cfg, positions)
+    ckv, krope = mla_lib.mla_new_cache_entry(p, xn, cfg, positions)
+    pad = max_len - xn.shape[1]
+    if pad > 0:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        krope = jnp.pad(krope, ((0, 0), (0, pad), (0, 0)))
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def make_prefill(cfg: ModelConfig, max_len: int,
+                 last_only: bool = False) -> Callable:
+    """prefill(params, tokens (B,S)) -> (logits, cache, lengths).
+
+    ``last_only`` returns logits for the final position only — the serving
+    path (avoids materializing (B,S,V), which at 32k x 152k vocab would be
+    hundreds of GB).
+    """
+
+    def prefill(params, tokens):
+        h = embed(params["embed"], tokens)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        lengths = jnp.full((b,), s, jnp.int32)
+
+        if cfg.family in ("dense", "audio", "vlm", "moe"):
+            def block(x, p):
+                xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+                if cfg.mla is not None:
+                    a, kv = _mla_prefill_attn(p["attn"], xn, cfg, positions,
+                                              max_len=max_len)
+                else:
+                    a, kv = _gqa_prefill_attn(p["attn"], xn, cfg, positions,
+                                              window=0, max_len=max_len)
+                x = x + a
+                xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+                if "moe" in p:
+                    y, _ = moe_lib.moe_ffn(p["moe"], xn, cfg)
+                else:
+                    y = mlp(p["mlp"], xn)
+                return x + y, kv
+
+            if cfg.family == "moe" and cfg.moe.first_dense:
+                h, kv_d = _maybe_scan(block, h, params["dense_blocks"],
+                                      cfg.scan_layers)
+                h, kv_m = _maybe_scan(block, h, params["moe_blocks"],
+                                      cfg.scan_layers)
+                kv = jax.tree.map(lambda a, b_: jnp.concatenate([a, b_]),
+                                  kv_d, kv_m)
+            elif cfg.family == "moe":
+                h, kv = _maybe_scan(block, h, params["moe_blocks"],
+                                    cfg.scan_layers)
+            else:
+                h, kv = _maybe_scan(block, h, params["blocks"],
+                                    cfg.scan_layers)
+            cache = {"kv": kv}
+
+        elif cfg.family == "hybrid":
+            h, cache = _hybrid_prefill(params, cfg, h, positions, max_len)
+
+        elif cfg.family == "ssm":
+            h, cache = _xlstm_prefill(params, cfg, h)
+
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        if last_only:
+            h = h[:, -1:]
+        logits = unembed(params["embed"], h, cfg.vocab_size)
+        return logits, cache, lengths
+
+    return prefill
+
+
+def _hybrid_prefill(params, cfg, h, positions, max_len):
+    gids = set(hymba_lib.global_layer_ids(cfg))
+    kinds = ["g" if i in gids else "s" for i in range(cfg.n_layers)]
+    win = min(cfg.swa_window, max_len)
+
+    def block(x, p, window, kv_len):
+        xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, kv = _gqa_prefill_attn(p["attn"], xn, cfg, positions,
+                                  window=window, max_len=kv_len)
+        s_out, ssm_state = ssm_lib.ssm_mixer(p["ssm"], xn, cfg,
+                                             return_state=True)
+        x = x + hymba_lib.fuse(p["fusion"], a, s_out, cfg)
+        xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], xn), (kv, ssm_state)
+
+    g_idx = s_idx = 0
+    g_kv, s_kv, g_ssm, s_ssm = [], [], [], []
+    i = 0
+    while i < cfg.n_layers:
+        j = i
+        while j < cfg.n_layers and kinds[j] == kinds[i]:
+            j += 1
+        count = j - i
+        is_g = kinds[i] == "g"
+        idx0 = g_idx if is_g else s_idx
+        pkey = "global_blocks" if is_g else "swa_blocks"
+        part_p = jax.tree.map(lambda t: t[idx0:idx0 + count], params[pkey])
+
+        def step(carry, p_layer, is_g=is_g):
+            x, out = block(carry, p_layer, 0 if is_g else cfg.swa_window,
+                           max_len if is_g else win)
+            return x, out
+
+        h, (kv_new, ssm_new) = _maybe_scan(step, h, part_p,
+                                           cfg.scan_layers)
+        (g_kv if is_g else s_kv).append(kv_new)
+        (g_ssm if is_g else s_ssm).append(ssm_new)
+        if is_g:
+            g_idx += count
+        else:
+            s_idx += count
+        i = j
+
+    cat = lambda parts: (jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+                         if len(parts) > 1 else parts[0])
+    return h, {"global_kv": cat(g_kv), "swa_kv": cat(s_kv),
+               "ssm_global": cat(g_ssm), "ssm_swa": cat(s_ssm)}
+
+
+def _xlstm_prefill(params, cfg, h):
+    def super_step(carry, p_super):
+        def m_step(c, p_layer):
+            c, st = xlstm_lib.mlstm_mixer(p_layer, c, cfg, return_state=True)
+            return c, st
+
+        carry, m_states = _maybe_scan(m_step, carry, p_super["mlstm"],
+                                      cfg.scan_layers)
+        carry, s_state = xlstm_lib.slstm_mixer(p_super["slstm"], carry, cfg)
+        return carry, {"mlstm": m_states, "slstm": s_state}
+
+    h, cache = _maybe_scan(super_step, h, params["super"],
+                           cfg.scan_layers)
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# batched-request engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Slot-based batched serving with greedy decode (framework example).
+
+    All slots share one jitted decode step; prefill runs per-request (padded
+    to the slot prompt window). In-situ providers expose the serving state
+    for the engine's compression/analytics tasks.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 prompt_len: int = 64, max_len: int = 256) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+        self.cache = kvcache.init_cache(cfg, slots, max_len)
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(make_decode(cfg))
+        self._prefill_one = jax.jit(make_prefill(cfg, max_len,
+                                                 last_only=True))
+
+    def admit(self, req: Request) -> bool:
+        for i, a in enumerate(self.active):
+            if a is None:
+                self.active[i] = req
+                prompt = req.prompt[-self.prompt_len:]
+                toks = jnp.asarray(prompt, jnp.int32)[None, :]
+                logits, cache1, lens1 = self._prefill_one(self.params, toks)
+                # merge slot i of the batch cache from the single-row cache
+                self.cache = jax.tree.map(
+                    lambda full, one: _set_batch_slot(full, one, i,
+                                                      self.cfg),
+                    self.cache, cache1)
+                self.lengths = self.lengths.at[i].set(int(lens1[0]))
+                nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+                self.tokens = self.tokens.at[i, 0].set(nxt)
+                req.out.append(int(nxt))
+                return True
+        return False
+
+    def step(self) -> None:
+        logits, self.cache, self.lengths = self._decode(
+            self.params, self.cache, self.tokens, self.lengths)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.tokens = nxt[:, None]
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+                self.lengths = self.lengths.at[i].set(0)
+
+    def insitu_providers(self) -> dict[str, Callable[[], Any]]:
+        return {"serving_state": lambda: self.cache,
+                "lengths": lambda: self.lengths}
+
+    def run(self, requests: list[Request], max_steps: int = 512) -> None:
+        pending = list(requests)
+        for _ in range(max_steps):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if not pending and all(a is None for a in self.active):
+                return
+            if any(a is not None for a in self.active):
+                self.step()
+
+
+def _set_batch_slot(full, one, i, cfg):
+    """Write batch row(s) of a single-request cache into slot i.
+
+    Cache leaves have layout (L, B, ...) or (L, L2, B, ...) for xlstm mlstm
+    stacks — the batch axis is the first axis of size matching ``one``'s.
+    """
+    # find the batch axis: the axis where one.shape[k] == 1 and
+    # full.shape[k] == slots, scanning after leading layer axes
+    for ax in range(full.ndim):
+        if one.shape[ax] == 1 and full.shape[ax] != one.shape[ax]:
+            idx = [slice(None)] * full.ndim
+            idx[ax] = i
+            src = jnp.squeeze(one, axis=ax)
+            return full.at[tuple(idx)].set(src.astype(full.dtype))
+    # shapes already equal (e.g. slots==1)
+    return one.astype(full.dtype)

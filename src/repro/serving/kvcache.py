@@ -1,0 +1,186 @@
+"""Per-arch serving-state layouts (KV cache / latent cache / SSM state).
+
+Layout notes per family (the arch-level data-reduction story that parallels
+the paper's in-situ compression):
+
+  dense GQA        : k/v (L, B, S, N, hd) — N = kv heads (GQA shrinks the
+                     cache by heads/N vs MHA).
+  MLA (deepseek)   : latent c_kv (L, B, S, kv_lora=512) + shared rope key
+                     (L, B, S, qk_rope=64) — 576 floats/token/layer instead
+                     of 128 heads x (128+64+128); ~71x smaller, which is what
+                     makes the 671B decode shapes feasible at all.
+  SWA (hymba)      : ring buffer (L, B, window, N, hd) — bounded for
+                     long_500k; plus per-layer SSM state (h, conv).
+  ssm (xlstm)      : O(1) recurrent state per block (mLSTM matrix memory C,
+                     normalizer n, stabilizer m, conv taps; sLSTM c/n/m/h).
+
+``init_cache`` returns concrete zeros (engine), ``cache_spec`` returns
+ShapeDtypeStructs (dry-run), ``cache_partition_spec`` returns PartitionSpecs
+(batch over data axes, kv-heads over model when divisible).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import hymba as hymba_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.distributed import sharding
+
+PyTree = Any
+
+
+def _gqa_kv(cfg: ModelConfig, layers: int, batch: int, seq: int):
+    hd = cfg.resolved_head_dim
+    shape = (layers, batch, seq, cfg.n_kv_heads, hd)
+    axes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": (shape, axes, cfg.dtype), "v": (shape, axes, cfg.dtype)}
+
+
+def _mla_kv(cfg: ModelConfig, layers: int, batch: int, seq: int):
+    m = cfg.mla
+    return {
+        "ckv": ((layers, batch, seq, m.kv_lora),
+                ("layers", "batch", "seq", None), cfg.dtype),
+        "krope": ((layers, batch, seq, m.qk_rope),
+                  ("layers", "batch", "seq", None), cfg.dtype),
+    }
+
+
+def _ssm_state(cfg: ModelConfig, layers: int, batch: int):
+    s = cfg.ssm
+    di = ssm_lib.d_inner(cfg)
+    return {
+        "h": ((layers, batch, di, s.d_state),
+              ("layers", "batch", "mlp", "state"), "float32"),
+        "conv": ((layers, batch, s.d_conv - 1, di),
+                 ("layers", "batch", "conv", "mlp"), cfg.dtype),
+    }
+
+
+def _xlstm_state(cfg: ModelConfig, batch: int):
+    x = cfg.xlstm
+    n_super = cfg.n_layers // x.slstm_every
+    per = x.slstm_every - 1
+    _, m_inner, nh, m_dh = xlstm_lib._dims(cfg)
+    conv_k = x.conv_kernel
+    s_dh = cfg.d_model // nh
+    neg = -1e30
+    return {
+        "mlstm": {
+            "c": ((n_super, per, batch, nh, m_dh, m_dh),
+                  ("layers", "layers", "batch", "heads", None, None), "float32"),
+            "n": ((n_super, per, batch, nh, m_dh),
+                  ("layers", "layers", "batch", "heads", None), "float32"),
+            "m": ((n_super, per, batch, nh),
+                  ("layers", "layers", "batch", "heads"), "float32", neg),
+            "conv": ((n_super, per, batch, conv_k - 1, m_inner),
+                     ("layers", "layers", "batch", "conv", "mlp"), cfg.dtype),
+        },
+        "slstm": {
+            "c": ((n_super, batch, nh, s_dh),
+                  ("layers", "batch", "heads", None), "float32"),
+            "n": ((n_super, batch, nh, s_dh),
+                  ("layers", "batch", "heads", None), "float32"),
+            "m": ((n_super, batch, nh, s_dh),
+                  ("layers", "batch", "heads", None), "float32", neg),
+            "h": ((n_super, batch, nh, s_dh),
+                  ("layers", "batch", "heads", None), cfg.dtype),
+        },
+    }
+
+
+def cache_layout(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Tree of (shape, logical_axes, dtype) descriptors."""
+    if cfg.family in ("dense", "audio", "vlm"):
+        if cfg.mla is not None:
+            return {"kv": _mla_kv(cfg, cfg.n_layers, batch, max_len)}
+        return {"kv": _gqa_kv(cfg, cfg.n_layers, batch, max_len)}
+    if cfg.family == "moe":
+        if cfg.mla is not None:
+            return {"kv": _mla_kv(cfg, cfg.n_layers, batch, max_len)}
+        return {"kv": _gqa_kv(cfg, cfg.n_layers, batch, max_len)}
+    if cfg.family == "hybrid":
+        n_global = len(hymba_lib.global_layer_ids(cfg))
+        n_swa = cfg.n_layers - n_global
+        win = min(cfg.swa_window, max_len)
+        return {
+            "global_kv": _gqa_kv(cfg, n_global, batch, max_len),
+            "swa_kv": _gqa_kv(cfg, n_swa, batch, win),
+            "ssm_global": _ssm_state(cfg, n_global, batch),
+            "ssm_swa": _ssm_state(cfg, n_swa, batch),
+        }
+    if cfg.family == "ssm":
+        return _xlstm_state(cfg, batch)
+    raise ValueError(cfg.family)
+
+
+def _map_layout(layout: PyTree, fn) -> PyTree:
+    is_desc = lambda x: (isinstance(x, tuple) and len(x) in (3, 4)
+                         and isinstance(x[0], tuple))
+    return jax.tree.map(fn, layout, is_leaf=is_desc)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    def mk(d):
+        fill = d[3] if len(d) == 4 else 0.0
+        return jnp.full(d[0], fill, jnp.dtype(d[2]))
+    return _map_layout(cache_layout(cfg, batch, max_len), mk)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    return _map_layout(cache_layout(cfg, batch, max_len),
+                       lambda d: jax.ShapeDtypeStruct(d[0], jnp.dtype(d[2])))
+
+
+_CACHE_RULES = {
+    "layers": None, "batch": "data", "seq": None, "kv_heads": "model",
+    "heads": "model", "head_dim": None, "mlp": "model", "state": None,
+    "conv": None, None: None,
+}
+
+
+def cache_partition_spec(cfg: ModelConfig, batch: int, max_len: int,
+                         mesh: Mesh) -> PyTree:
+    """Batch over ('pod','data'); kv-heads/mlp over 'model' when divisible.
+
+    Fallback: when the kv-heads dim does not divide the model axis (GQA with
+    few kv heads — most assigned archs at model=16), the *sequence* axis of
+    that leaf takes 'model' instead (cache sequence-parallelism). This is
+    what keeps e.g. qwen1.5-110b's 1.4 TB decode_32k cache at ~5 GB/chip.
+    """
+    rules = dict(_CACHE_RULES)
+    rules["batch"] = sharding.dp_axes(mesh)
+    sizes = dict(mesh.shape)   # works for Mesh and AbstractMesh
+    model_size = sizes.get("model", 1)
+
+    def leaf(d):
+        shape, axes = d[0], d[1]
+        rr = dict(rules)
+        # does any 'model'-destined dim actually divide?
+        model_ok = any(
+            rr.get(a) == "model" and dim % model_size == 0
+            for dim, a in zip(shape, axes))
+        if not model_ok and "seq" in axes:
+            i = axes.index("seq")
+            if shape[i] % model_size == 0:
+                rr["seq"] = "model"
+        return sharding.spec_for(shape, axes, rr, mesh)
+
+    return _map_layout(cache_layout(cfg, batch, max_len), leaf)
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    total = 0
+    for d in jax.tree.leaves(
+            cache_layout(cfg, batch, max_len),
+            is_leaf=lambda x: (isinstance(x, tuple) and len(x) in (3, 4)
+                               and isinstance(x[0], tuple))):
+        total += int(np.prod(d[0])) * jnp.dtype(d[2]).itemsize
+    return total

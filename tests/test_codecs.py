@@ -1,0 +1,60 @@
+"""Lossless codec layer: framing, roundtrips, Table II-style ratios."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codecs
+
+
+@pytest.mark.parametrize("codec", codecs.available())
+@pytest.mark.parametrize("dtype", [np.float32, np.int8, np.uint16, np.int64])
+def test_roundtrip_all_codecs(codec, dtype, rng):
+    arr = (rng.standard_normal((37, 21)) * 100).astype(dtype)
+    blob, stats = codecs.encode(arr, codec)
+    out = codecs.decode(blob)
+    np.testing.assert_array_equal(out, arr)
+    assert out.dtype == arr.dtype
+    assert stats.raw_bytes == arr.nbytes
+
+
+def test_frame_self_describing(rng):
+    arr = rng.standard_normal((3, 4, 5)).astype(np.float32)
+    blob, _ = codecs.encode(arr, "bz2")
+    out = codecs.decode(blob)   # no out-of-band metadata
+    assert out.shape == (3, 4, 5)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError):
+        codecs.decode(b"XXXX" + b"\x00" * 32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=0, max_value=3000),
+    seed=st.integers(min_value=0, max_value=999),
+    codec=st.sampled_from(["zlib", "bz2", "lzma", "none"]),
+)
+def test_roundtrip_property(n, seed, codec):
+    r = np.random.default_rng(seed)
+    arr = r.integers(-128, 127, size=n).astype(np.int8)
+    out = codecs.decode(codecs.encode(arr, codec)[0])
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_table2_ordering_on_float_data(rng):
+    """Paper Table II: plain lossless on float scientific data removes only
+    a few percent; zeros-heavy int8 (post-lossy) compresses drastically."""
+    floats = rng.standard_normal(200_000).astype(np.float32)
+    sparse = np.zeros(200_000, np.int8)
+    sparse[rng.integers(0, 200_000, 4000)] = rng.integers(-127, 127, 4000)
+    for codec in ("zlib", "bz2", "lzma"):
+        cr_float = codecs.compression_ratio(floats, codec).ratio
+        cr_sparse = codecs.compression_ratio(sparse, codec).ratio
+        assert cr_float < 0.2, f"{codec} on random floats: {cr_float}"
+        assert cr_sparse > 0.9, f"{codec} on sparse int8: {cr_sparse}"
+
+
+def test_compression_stats_eq1():
+    s = codecs.CompressionStats("zlib", 100, 25)
+    assert s.ratio == pytest.approx(0.75)   # paper Eq. (1)

@@ -1,0 +1,102 @@
+"""Fault tolerance (heartbeat/straggler/remesh) + data pipeline."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import BatchSpec, Prefetcher, synth_batch
+from repro.distributed.fault import (HeartbeatTracker, StragglerMonitor,
+                                     plan_elastic_remesh)
+
+
+# -- heartbeat ----------------------------------------------------------------
+
+def test_heartbeat_failure_detection():
+    hb = HeartbeatTracker([0, 1, 2], grace_s=10.0)
+    now = 1000.0
+    for h in (0, 1, 2):
+        hb.beat(h, now=now)
+    hb.beat(0, now=now + 20)
+    hb.beat(1, now=now + 20)
+    assert hb.failed_hosts(now=now + 20) == [2]
+    assert hb.alive_hosts(now=now + 20) == [0, 1]
+
+
+# -- stragglers -----------------------------------------------------------------
+
+def test_straggler_detection_and_policy():
+    mon = StragglerMonitor(alpha=1.0, factor=1.5)
+    for h in range(8):
+        mon.observe(h, 1.0)
+    mon.observe(7, 1.8)          # 1.8x median -> straggler, mild
+    assert mon.stragglers() == [7]
+    assert mon.mitigation(7) == "reduce_insitu_pi"
+    mon.observe(7, 10.0)         # way over -> replace
+    assert mon.mitigation(7) == "replace_at_checkpoint"
+    assert mon.mitigation(0) == "none"
+
+
+# -- elastic re-mesh ---------------------------------------------------------------
+
+def test_remesh_shrinks_data_axis_first():
+    plan = plan_elastic_remesh((16, 16), ("data", "model"),
+                               surviving_devices=240)
+    assert plan.new_shape == (15, 16)
+    assert plan.model_merge_factor == 1
+
+
+def test_remesh_merges_tp_when_needed():
+    plan = plan_elastic_remesh((16, 16), ("data", "model"),
+                               surviving_devices=24)
+    d, m = plan.new_shape
+    assert d * m <= 24
+    assert 16 % m == 0
+
+
+def test_remesh_multipod_drops_whole_pod():
+    plan = plan_elastic_remesh((2, 16, 16), ("pod", "data", "model"),
+                               surviving_devices=300)
+    assert plan.new_shape[0] in (1, 2)
+    n = 1
+    for s in plan.new_shape:
+        n *= s
+    assert n <= 300
+
+
+def test_remesh_impossible_raises():
+    with pytest.raises(ValueError):
+        plan_elastic_remesh((16, 16), ("data", "model"), surviving_devices=0)
+
+
+# -- data pipeline ------------------------------------------------------------------
+
+def test_synth_batch_deterministic():
+    spec = BatchSpec(4, 64, 50000)
+    a = synth_batch(spec, step=7, seed=1)
+    b = synth_batch(spec, step=7, seed=1)
+    c = synth_batch(spec, step=8, seed=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < 50000
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_prefetcher_produces_and_closes():
+    spec = BatchSpec(2, 16, 1000)
+    pf = Prefetcher(spec, depth=2)
+    batches = [next(pf) for _ in range(5)]
+    pf.close()
+    assert all(b["tokens"].shape == (2, 16) for b in batches)
+
+
+def test_prefetcher_preprocess_hook():
+    spec = BatchSpec(2, 16, 1000)
+    pf = Prefetcher(spec, depth=1,
+                    preprocess=lambda s, b: {**b, "extra": np.ones(3)})
+    b = next(pf)
+    pf.close()
+    assert "extra" in b
+
+
+def test_frontend_prefix_in_batch():
+    spec = BatchSpec(2, 16, 1000, frontend_tokens=8, d_model=64)
+    b = synth_batch(spec, 0)
+    assert b["prefix"].shape == (2, 8, 64)

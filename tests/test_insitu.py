@@ -1,0 +1,144 @@
+"""InSituEngine semantics: the paper's Fig. 1 contract, measured.
+
+  SYNC   — task runs on the loop thread; loop time includes it.
+  ASYNC  — loop only pays the hand-off; task runs on insitu-* threads
+           concurrently with subsequent steps.
+  Backpressure — a slow consumer stalls the producer once the ring fills
+           (the F3 regime).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (InSituEngine, InSituMode, InSituTask, StagedItem,
+                        StagingBuffer, Telemetry, run_workflow)
+from repro.core.allocator import Allocator, AmdahlModel
+from repro.core.staging import Closed
+
+
+def _engine(mode, task_s=0.02, every=1, p_i=2, cap=4):
+    def work(step, payload):
+        time.sleep(task_s)
+        return ("done", step)
+
+    return InSituEngine(
+        [InSituTask("t", "x", work, mode=mode, every=every)],
+        p_i=p_i, staging_capacity=cap)
+
+
+def _run(engine, n=6, step_s=0.01):
+    def app_step(i):
+        time.sleep(step_s)   # a TPU-like device step: host-idle wait
+        return {"x": lambda: np.zeros(8)}
+
+    return run_workflow(n, app_step, engine)
+
+
+def test_sync_runs_on_loop_thread():
+    eng = _engine(InSituMode.SYNC)
+    _run(eng)
+    assert len(eng.results) == 6
+    assert all(r.worker == threading.main_thread().name for r in eng.results)
+    assert eng.telemetry.total("insitu-sync/") > 0
+    assert eng.telemetry.total("insitu-async/") == 0
+
+
+def test_async_runs_on_workers_and_overlaps():
+    eng = _engine(InSituMode.ASYNC, task_s=0.03)
+    t0 = time.perf_counter()
+    _run(eng, n=6, step_s=0.03)
+    wall = time.perf_counter() - t0
+    assert len(eng.results) == 6
+    assert all(r.worker.startswith("insitu-") for r in eng.results)
+    # serial would be >= 6*(0.03+0.03) = 0.36; overlap must beat it
+    assert wall < 0.33, f"no overlap: wall={wall:.3f}s"
+    assert eng.telemetry.total("insitu-sync/") == 0
+
+
+def test_async_backpressure_recorded():
+    eng = _engine(InSituMode.ASYNC, task_s=0.05, p_i=1, cap=1)
+    _run(eng, n=8, step_s=0.001)
+    # ring of 1 with slow consumer -> producer must have waited
+    assert eng.telemetry.total("staging/wait") > 0
+    assert len(eng.results) == 8
+
+
+def test_every_n_steps():
+    eng = _engine(InSituMode.ASYNC, task_s=0.0, every=3)
+    _run(eng, n=9)
+    assert sorted(r.step for r in eng.results) == [0, 3, 6]
+
+
+def test_worker_errors_captured_not_fatal():
+    def bad(step, payload):
+        raise RuntimeError("boom")
+
+    eng = InSituEngine([InSituTask("bad", "x", bad, InSituMode.ASYNC)], p_i=1)
+    _run(eng, n=3)
+    assert len(eng.errors) == 3
+    assert len(eng.results) == 0
+
+
+def test_lazy_providers_only_called_when_fired():
+    calls = []
+
+    def app_step(i):
+        return {"x": lambda: calls.append(i) or np.zeros(2)}
+
+    eng = _engine(InSituMode.ASYNC, task_s=0.0, every=5)
+    run_workflow(10, app_step, eng)
+    assert calls == [0, 5]
+
+
+# -- staging ring -------------------------------------------------------------
+
+def test_staging_fifo_and_close():
+    buf = StagingBuffer(capacity=3)
+    for i in range(3):
+        buf.put(StagedItem(i, "a", i))
+    assert [buf.get().payload for _ in range(3)] == [0, 1, 2]
+    buf.close()
+    with pytest.raises(Closed):
+        buf.get(timeout=0.01)
+    with pytest.raises(Closed):
+        buf.put(StagedItem(9, "a", 9))
+
+
+def test_staging_try_put_drop_policy():
+    buf = StagingBuffer(capacity=1)
+    assert buf.try_put(StagedItem(0, "a", 0))
+    assert not buf.try_put(StagedItem(1, "a", 1))
+
+
+# -- allocator (Table I / F1 / F6) ---------------------------------------------
+
+def test_amdahl_fit():
+    m = AmdahlModel()
+    for p in (1, 2, 4, 8):
+        m.observe(p, 1.0 + 8.0 / p)
+    assert m.serial == pytest.approx(1.0, abs=0.05)
+    assert m.parallel == pytest.approx(8.0, rel=0.05)
+
+
+def test_allocator_balances_app_and_task():
+    """F1: optimal async split puts both sides at roughly equal duration."""
+    al = Allocator(p_total=72)
+    for p in (18, 36, 72):
+        al.observe_app(p, 10.0 / p)        # app scales well
+        al.observe_task(p, 0.05 + 2.0 / p)  # task scales worse
+    plan = al.plan(n_steps=100, every=5)
+    assert plan.mode == "async"
+    assert al.balance_quality(plan) < 0.35
+    assert plan.p_app + plan.p_insitu == 72
+
+
+def test_allocator_prefers_sync_for_cheap_tasks():
+    """F6: when the task is trivially cheap, sync wins (no staging tax)."""
+    al = Allocator(p_total=8, handoff_s=0.5)
+    al.observe_app(8, 1.0)
+    al.observe_task(8, 1e-4)
+    al.observe_task(1, 1e-3)
+    plan = al.plan(n_steps=100, every=1)
+    assert plan.mode == "sync"

@@ -1,0 +1,50 @@
+"""End-to-end integration: train loop with in-situ engine + resume; serve."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.train import train_loop
+from repro.launch.serve import serve_loop
+
+
+def test_train_loop_with_insitu_and_checkpoint(tmp_path):
+    out = train_loop("smollm-135m", steps=12, smoke=True,
+                     insitu_mode="async", ckpt_dir=str(tmp_path),
+                     ckpt_every=5, analytics_every=4, log=lambda *_: None)
+    assert len(out["losses"]) == 12
+    assert all(np.isfinite(l) for l in out["losses"])
+    assert out["insitu_results"] >= 3            # steps 0,4,8
+    # checkpoints on steps 0,5,10
+    assert len(os.listdir(tmp_path)) >= 1
+
+
+def test_train_loop_resumes(tmp_path):
+    train_loop("smollm-135m", steps=11, smoke=True, insitu_mode="sync",
+               ckpt_dir=str(tmp_path), ckpt_every=5, log=lambda *_: None)
+    logs = []
+    train_loop("smollm-135m", steps=3, smoke=True, insitu_mode="sync",
+               ckpt_dir=str(tmp_path), ckpt_every=5, log=logs.append)
+    assert any("resumed from step 10" in str(l) for l in logs)
+
+
+def test_telemetry_attribution_sync_vs_async():
+    out_s = train_loop("smollm-135m", steps=8, smoke=True,
+                       insitu_mode="sync", analytics_every=2,
+                       log=lambda *_: None)
+    out_a = train_loop("smollm-135m", steps=8, smoke=True,
+                       insitu_mode="async", analytics_every=2,
+                       log=lambda *_: None)
+    rep_s = out_s["telemetry"].step_overlap_report()
+    rep_a = out_a["telemetry"].step_overlap_report()
+    assert rep_s["sync_stall_s"] > 0
+    assert rep_a["sync_stall_s"] == 0
+    assert rep_a["async_overlapped_s"] > 0
+
+
+def test_serve_loop_completes_requests():
+    out = serve_loop("smollm-135m", n_requests=3, max_new=3, slots=2,
+                     insitu_mode="async", log=lambda *_: None)
+    assert all(r.done for r in out["requests"])
+    assert out["insitu_results"] >= 1

@@ -1,0 +1,164 @@
+"""Pallas spectral-lossy kernels vs the pure-jnp oracle (ref.py).
+
+Covers: shape/dtype sweeps, threshold-by-histogram ≡ threshold-by-sort
+(paper finding F7's TPU replacement), error bounds, and hypothesis
+properties of the end-to-end codec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import spectral_lossy as K
+
+
+def _signal(n, seed=0, kind="smooth"):
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0, 20, n)
+    if kind == "smooth":
+        x = np.sin(t) + 0.25 * np.sin(9 * t) + 0.02 * rng.standard_normal(n)
+    elif kind == "noise":
+        x = rng.standard_normal(n)
+    else:  # spiky
+        x = np.zeros(n)
+        x[rng.integers(0, n, size=max(1, n // 50))] = rng.standard_normal(
+            max(1, n // 50)) * 10
+    return jnp.asarray(x.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle, shape sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 2048, 2048 + 256, 40000, 257])
+@pytest.mark.parametrize("kind", ["smooth", "noise"])
+def test_dct_hist_kernel_matches_oracle(n, kind):
+    x = _signal(n, kind=kind)
+    xb, _ = ref.blockize(x)
+    pad = (-xb.shape[0]) % K.HIST_TILE
+    xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    y_k, cnt_k, eng_k = K.dct_hist(xb, interpret=True)
+    y_o = ref.dct_blocks(xb)
+    cnt_o, eng_o = ref.energy_histogram(y_o)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt_k), np.asarray(cnt_o))
+    np.testing.assert_allclose(np.asarray(eng_k), np.asarray(eng_o),
+                               rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("nb", [8, 64, 72, 136])
+def test_quant_dequant_kernels_match_oracle(nb):
+    rng = np.random.default_rng(1)
+    y = jnp.asarray(rng.standard_normal((nb, ref.BLOCK)).astype(np.float32))
+    t = jnp.asarray(0.3, jnp.float32)
+    q_k, s_k = K.threshold_quant(y, t, interpret=True)
+    q_o, s_o = ref.quantize_blocks(y, t)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_o))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_o), rtol=1e-6)
+    x_k = K.dequant_idct(q_k, s_k, interpret=True)
+    x_o = ref.idct_blocks(ref.dequantize_blocks(q_o, s_o))
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_o),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_codec_dtype_sweep(dtype):
+    x = _signal(5000).astype(dtype)
+    c = ops.spectral_compress(x, 1e-2)
+    xh = ops.spectral_decompress(c)
+    assert xh.dtype == dtype and xh.shape == x.shape
+    err = ref.rel_l2_error(x.astype(jnp.float32), xh.astype(jnp.float32))
+    assert err <= ref.error_bound(1e-2) + 0.02  # + dtype rounding slack
+
+
+# ---------------------------------------------------------------------------
+# histogram select ≡ sort select (the F7 TPU adaptation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eps", [1e-1, 1e-2, 1e-3])
+@pytest.mark.parametrize("kind", ["smooth", "noise", "spiky"])
+def test_histogram_select_equals_sort_select(eps, kind):
+    x = _signal(30000, seed=3, kind=kind)
+    xb, _ = ref.blockize(x)
+    y = ref.dct_blocks(xb)
+    _, energies = ref.energy_histogram(y)
+    t_hist = ref.threshold_from_histogram(energies, eps)
+    t_sort = ref.threshold_by_sort(y, eps)
+    total = float(jnp.sum(y * y))
+    a = np.abs(np.asarray(y)).reshape(-1)
+    dropped_hist = float(np.sum((a[a < float(t_hist)]) ** 2))
+    # guarantee: histogram threshold never discards more than the budget
+    assert dropped_hist <= (eps * eps) * total * (1 + 1e-5)
+    # conservatism: within one bin resolution of the sort-optimal threshold
+    if float(t_sort) > 0 and float(t_hist) > 0:
+        ratio = float(t_hist) / float(t_sort)
+        assert ratio <= 2 ** (80.0 / ref.NBINS) + 1e-6  # one bin width
+    kept_hist = float(np.mean(a >= float(t_hist)))
+    kept_sort = float(np.mean(a >= float(t_sort)))
+    assert kept_hist >= kept_sort - 1e-9  # never keeps fewer than optimal
+
+
+# ---------------------------------------------------------------------------
+# error-bound property (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=16, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    eps=st.sampled_from([1e-1, 1e-2, 1e-3]),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_roundtrip_error_bound_property(n, seed, eps, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal(n) * scale).astype(np.float32))
+    c = ref.compress(x, eps)
+    xh = ref.decompress(c)
+    assert ref.rel_l2_error(x, xh) <= ref.error_bound(eps) + 1e-5
+    assert not np.isnan(np.asarray(xh)).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=st.sampled_from([(7,), (33, 5), (4, 4, 17), (256,), (2, 128)]))
+def test_shape_preservation_property(shape):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    c = ops.spectral_compress(x, 1e-2)
+    xh = ops.spectral_decompress(c)
+    assert xh.shape == tuple(shape)
+
+
+def test_compression_ratio_on_smooth_data_matches_paper():
+    """Paper §IV-B: lossy+lossless removes ~98% at eps=1e-2 on smooth fields."""
+    from repro.core import codecs
+    x = _signal(200_000, kind="smooth")
+    c = ops.spectral_compress(x, 1e-2)
+    blob, st_ = codecs.encode(np.asarray(c.q), "zlib")
+    stored = len(blob) + int(np.asarray(c.scale).nbytes)
+    ratio = (x.nbytes - stored) / x.nbytes
+    assert ratio >= 0.95, f"only {ratio:.3f} removed"
+
+
+def test_zero_input_exact():
+    x = jnp.zeros(1000)
+    xh = ops.spectral_decompress(ops.spectral_compress(x, 1e-2))
+    np.testing.assert_array_equal(np.asarray(xh), np.asarray(x))
+
+
+def test_constant_input_block_aligned_exact():
+    # a constant block is pure DC -> survives any threshold, exact to quant
+    x = jnp.full((1024,), 3.25)   # 4 whole blocks, no zero-padding
+    xh = ops.spectral_decompress(ops.spectral_compress(x, 1e-2))
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(x), atol=0.02)
+
+
+def test_constant_input_padded_l2_bound():
+    # zero-padding makes the tail block a step function (Gibbs ringing);
+    # the codec's guarantee is relative-L2, which must still hold
+    x = jnp.full((1000,), 3.25)
+    c = ops.spectral_compress(x, 1e-2)
+    xh = ops.spectral_decompress(c)
+    assert ref.rel_l2_error(x, xh) <= ref.error_bound(1e-2)

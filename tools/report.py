@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run artifacts.
+
+    PYTHONPATH=src python tools/report.py [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def fmt_bytes(x):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def load(tag=""):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("tag", "") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def table(rows):
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | step s | useful | roofline frac | cost |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        exact = "exact" if "raw_scanned_cost" in d else "scanned*"
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['compute_s']:.4f} | {d['memory_s']:.4f} "
+            f"| {d['collective_s']:.4f} | {d['bottleneck']} "
+            f"| {d['step_s']:.4f} | {d['useful_flops_ratio']:.2f} "
+            f"| {d['roofline_fraction']:.3f} | {exact} |")
+    return "\n".join(out)
+
+
+def memtable(rows):
+    out = ["| arch | shape | mesh | args/device | temps/device | model-mem/device |",
+           "|" + "---|" * 6]
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        m = d.get("memory_per_device_bytes") or {}
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {fmt_bytes(m.get('argument_bytes') or 0)} "
+            f"| {fmt_bytes(m.get('temp_bytes') or 0)} "
+            f"| {fmt_bytes(d.get('model_bytes_per_device') or 0)} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mem", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.tag)
+    print(f"<!-- {len(rows)} cells, tag={args.tag!r} -->")
+    print(table(rows))
+    if args.mem:
+        print()
+        print(memtable(rows))
+
+
+if __name__ == "__main__":
+    main()
