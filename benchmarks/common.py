@@ -26,8 +26,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core import (InSituEngine, InSituMode, InSituTask, Telemetry,
-                        run_workflow)
+from repro.core import (InSituMode, PipelineRuntime, PipelineTask, Telemetry,
+                        run_pipeline)
 from repro.core.allocator import AmdahlModel
 
 ROWS: list[tuple[str, float, str]] = []
@@ -63,14 +63,16 @@ def turbulence_field(n: int = 1 << 18, seed: int = 0) -> np.ndarray:
 def run_modes(task_fn: Callable[[int, Any], Any], payload: np.ndarray, *,
               n_steps: int, step_s: float, every: int, p_i: int = 2,
               modes=(InSituMode.SYNC, InSituMode.ASYNC),
-              shards: int = 1, capacity: int = 4) -> dict[str, dict]:
-    """Run the same workflow under each in-situ mode; return timings."""
+              shards: int = 1, capacity: int = 4,
+              backpressure: str = "block") -> dict[str, dict]:
+    """Run the same pipeline under each placement policy; return timings."""
     out = {}
     for mode in modes:
-        eng = InSituEngine(
-            [InSituTask("t", "x", task_fn, mode=mode, every=every,
-                        shards=shards)],
-            p_i=p_i, staging_capacity=capacity)
+        rt = PipelineRuntime(
+            [PipelineTask("t", "x", sink=task_fn, placement=mode,
+                          every=every, shards=shards,
+                          backpressure=backpressure)],
+            workers=p_i, staging_capacity=capacity)
         dev = DeviceSim(step_s)
 
         def app_step(i):
@@ -78,12 +80,12 @@ def run_modes(task_fn: Callable[[int, Any], Any], payload: np.ndarray, *,
             return {"x": lambda: payload}
 
         t0 = time.perf_counter()
-        run_workflow(n_steps, app_step, eng)
+        run_pipeline(n_steps, app_step, rt)
         wall = time.perf_counter() - t0
-        rep = eng.report()
+        rep = rt.report()
         rep["wall_s"] = wall
-        rep["results"] = len(eng.results)
-        assert not eng.errors, eng.errors[:1]
+        rep["results"] = len(rt.results)
+        assert not rt.errors, rt.errors[:1]
         out[mode.value] = rep
     return out
 

@@ -32,9 +32,12 @@ def run(quick: bool = True) -> dict:
     sync_raw = common.run_modes(lossless, field, n_steps=n, step_s=step_s,
                                 every=every, p_i=1,
                                 modes=(InSituMode.SYNC,))["sync"]
+    # HYBRID placement: async host scheduling over the device-reduced
+    # payload (the residue is precomputed once — on hardware the device
+    # stage is compiled into the step and costs no host time)
     hybrid = common.run_modes(lossless, q, n_steps=n, step_s=step_s,
                               every=every, p_i=1,
-                              modes=(InSituMode.ASYNC,))["async"]
+                              modes=(InSituMode.HYBRID,))["hybrid"]
     common.row("fig08/sync_raw/wall", sync_raw["wall_s"] * 1e6 / n,
                "measured")
     common.row("fig08/hybrid/wall", hybrid["wall_s"] * 1e6 / n,

@@ -1,23 +1,29 @@
-"""CheckpointManager: sync / async / hybrid checkpointing as in-situ tasks.
+"""CheckpointManager: the checkpoint workload as ONE registered pipeline.
 
 Checkpointing is the paper's motivating I/O problem (QE restart files,
 hundreds of GB, written every few steps for walltime/failure reasons). The
-manager implements all three placements of Fig. 1 for the *compression +
-write* work:
+manager no longer forks the in-situ engine — it registers a single
+declarative pipeline into a ``repro.core.runtime.PipelineRuntime``:
 
-  SYNC   : hand-off + compress + write inline — the loop (and the device,
-           which has nothing queued) stalls. Baseline, paper Fig. 10.
-  ASYNC  : the loop blocks only for the device->host hand-off; compression
-           and file I/O run on the in-situ workers (paper Fig. 11/12 — QE
-           with ADIOS2 async compression).
-  HYBRID : the spectral lossy stage runs on-device *inside a jit* (Pallas),
-           the hand-off ships only int8 coefficients + scales (~4-50x
-           smaller), the lossless stage + write run async on workers
-           (paper Fig. 8/9 — NEKO lossy-on-GPU + Bzip2-on-CPU).
+    DeviceStage  (HYBRID only) Pallas spectral-lossy on the moment leaves;
+                 the hand-off then ships int8 coefficients + scales
+                 (~4-50x smaller — paper Fig. 8/9, NEKO lossy-on-GPU)
+    Handoff      ``state_to_host`` + bf16-key bookkeeping (the part the
+                 device genuinely serializes on)
+    HostStage    'encode': lossless framing of every leaf (core codecs)
+    Sink         'write': blobs -> manifest -> atomic directory rename,
+                 then lock-guarded retention
 
-Durability: blobs -> manifest -> atomic directory rename; a reader can never
-observe a partial checkpoint. Retention keeps the newest K. ``restore``
-re-places leaves under the *current* mesh's shardings (elastic restart).
+SYNC / ASYNC / HYBRID are scheduling policies of the shared runtime
+(Fig. 1, paper Figs. 10-12), not manager code paths. A runtime can be
+shared with other in-situ tasks (the training loop passes its own), so
+checkpoint writes and analytics draw from the same p_i worker pool.
+
+Durability: blobs -> manifest -> atomic directory rename; a reader can
+never observe a partial checkpoint. Retention keeps the newest K (guarded
+by the manager lock — multiple async workers may finish writes
+concurrently). ``restore`` re-places leaves under the *current* mesh's
+shardings (elastic restart).
 """
 from __future__ import annotations
 
@@ -25,18 +31,20 @@ import os
 import re
 import shutil
 import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import serialization as ser
-from repro.core.insitu import InSituEngine, InSituMode, InSituTask
+from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
+                                Stage)
 from repro.core.telemetry import Telemetry
 
 PyTree = Any
+
+# historical name, same enum as the runtime's Placement
+InSituMode = Placement
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
 
@@ -50,51 +58,91 @@ def default_lossy_policy(key: str) -> bool:
 @dataclass
 class CheckpointConfig:
     directory: str
-    mode: InSituMode = InSituMode.ASYNC
+    mode: Placement = Placement.ASYNC
     every: int = 100
     keep: int = 3
     lossless: str = "zlib"
     lossy_eps: float = 1e-2
     lossy_moments: bool = True
-    p_i: int = 2                      # workers for async/hybrid
+    p_i: int = 2                      # workers for a manager-owned runtime
     staging_capacity: int = 2
 
 
 class CheckpointManager:
     def __init__(self, cfg: CheckpointConfig,
-                 telemetry: Optional[Telemetry] = None) -> None:
+                 telemetry: Optional[Telemetry] = None,
+                 runtime: Optional[PipelineRuntime] = None) -> None:
         self.cfg = cfg
-        self.telemetry = telemetry or Telemetry()
         os.makedirs(cfg.directory, exist_ok=True)
         self.reports: list[ser.SaveReport] = []
         self._lock = threading.Lock()
-        self._engine: Optional[InSituEngine] = None
-        if cfg.mode in (InSituMode.ASYNC, InSituMode.HYBRID):
-            task = InSituTask("checkpoint", "ckpt_state", self._write_task,
-                              mode=InSituMode.ASYNC, every=1)
-            self._engine = InSituEngine(
-                [task], p_i=cfg.p_i, staging_capacity=cfg.staging_capacity,
+        self._owns_runtime = runtime is None
+        if runtime is None:
+            self.telemetry = telemetry or Telemetry()
+            runtime = PipelineRuntime(
+                workers=cfg.p_i, staging_capacity=cfg.staging_capacity,
                 telemetry=self.telemetry)
+        else:
+            if telemetry is not None and telemetry is not runtime.telemetry:
+                raise ValueError(
+                    "pass either a telemetry or a runtime (whose telemetry "
+                    "is used), not two different objects")
+            self.telemetry = runtime.telemetry
+        self.runtime = runtime
+        device_stage = (self._device_lossy
+                        if cfg.mode is Placement.HYBRID and cfg.lossy_moments
+                        else None)
+        self._task = self.runtime.register(PipelineTask(
+            name="checkpoint",
+            source="ckpt_state",
+            placement=cfg.mode,
+            every=1,                 # save()/maybe_save gate on cfg.every
+            device_stage=device_stage,
+            handoff=self._handoff,
+            host_stages=(Stage("encode", self._encode_stage),),
+            sink=self._write_sink,
+        ))
 
-    # -- write path ---------------------------------------------------------
+    # -- pipeline stages ------------------------------------------------------
 
     def _lossy_policy(self) -> Optional[Callable[[str], bool]]:
         return default_lossy_policy if self.cfg.lossy_moments else None
 
-    def _write_task(self, step: int, payload: dict) -> ser.SaveReport:
-        """Host-side compress+write (runs inline for SYNC, on workers else)."""
-        host_state: dict[str, np.ndarray] = payload["state"]
-        bf16_keys: set = payload["bf16_keys"]
-        meta: dict = payload["meta"]
+    def _device_lossy(self, step: int, payload: tuple) -> tuple:
+        """Device stage (HYBRID): spectral-lossy the moment leaves in-place."""
+        from repro.kernels import ops as kops
+        state, meta = payload
+        state = kops.spectral_compress_tree(state, self.cfg.lossy_eps,
+                                            default_lossy_policy)
+        return state, meta
+
+    def _handoff(self, payload: tuple) -> dict:
+        """Device->host transfer + bf16 bookkeeping (numpy has no bf16)."""
+        state, meta = payload
+        host_state = ser.state_to_host(state)
+        bf16_keys = {
+            k for (p, l) in jax.tree_util.tree_flatten_with_path(state)[0]
+            if l is not None and getattr(l, "dtype", None) == jax.numpy.bfloat16
+            for k in [jax.tree_util.keystr(p)]}
+        return {"state": host_state, "bf16_keys": bf16_keys,
+                "meta": meta or {}}
+
+    def _encode_stage(self, step: int, payload: dict) -> dict:
+        """Host stage: lossless-encode every leaf (pure compute, no I/O)."""
+        encoded = ser.encode_blobs(
+            payload["state"], lossless=self.cfg.lossless,
+            eps=self.cfg.lossy_eps, lossy_policy=self._lossy_policy(),
+            bf16_keys=payload["bf16_keys"])
+        return {"encoded": encoded, "meta": payload["meta"]}
+
+    def _write_sink(self, step: int, payload: dict) -> ser.SaveReport:
+        """Sink: atomic write (blobs -> manifest -> rename) + retention."""
         tmp = os.path.join(self.cfg.directory, f".tmp_step_{step:09d}")
         final = os.path.join(self.cfg.directory, f"step_{step:09d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-        entries = ser.write_blobs(
-            host_state, tmp, lossless=self.cfg.lossless,
-            eps=self.cfg.lossy_eps, lossy_policy=self._lossy_policy(),
-            bf16_keys=bf16_keys)
-        ser.write_manifest(tmp, step, entries, meta)
+        entries = ser.write_encoded(tmp, payload["encoded"])
+        ser.write_manifest(tmp, step, entries, payload["meta"])
         ser.commit(tmp, final)
         raw = sum(e["raw_bytes"] for e in entries.values())
         stored = sum(e["bytes"] for e in entries.values())
@@ -102,49 +150,22 @@ class CheckpointManager:
                                 sum(1 for e in entries.values() if e["lossy"]))
         with self._lock:
             self.reports.append(report)
-        self._retain()
+            # retention under the lock: concurrent async workers would
+            # otherwise interleave list_steps()/rmtree
+            self._retain_locked()
         return report
 
-    def _retain(self) -> None:
+    def _retain_locked(self) -> None:
         steps = sorted(self.list_steps())
         for s in steps[: -self.cfg.keep] if self.cfg.keep > 0 else []:
             shutil.rmtree(os.path.join(self.cfg.directory, f"step_{s:09d}"),
                           ignore_errors=True)
 
+    # -- write path -----------------------------------------------------------
+
     def save(self, step: int, state: PyTree, meta: Optional[dict] = None) -> None:
-        """Checkpoint one training state according to the configured mode."""
-        if self.cfg.mode is InSituMode.HYBRID and self.cfg.lossy_moments:
-            # device-side lossy stage (Pallas spectral codec) BEFORE the
-            # hand-off: the D2H transfer ships int8 coefficients + scales.
-            from repro.kernels import ops as kops
-            from repro.kernels.ref import Compressed
-            policy = default_lossy_policy
-            with self.telemetry.span("insitu-device/lossy", step=step):
-                flat, treedef = jax.tree_util.tree_flatten_with_path(state)
-                new_leaves = []
-                for path, leaf in flat:
-                    key = jax.tree_util.keystr(path)
-                    if leaf is not None and policy(key):
-                        new_leaves.append(kops.spectral_compress(
-                            leaf, self.cfg.lossy_eps))
-                    else:
-                        new_leaves.append(leaf)
-                state = jax.tree_util.tree_unflatten(treedef, new_leaves)
-        with self.telemetry.span("step/handoff", step=step, task="checkpoint"):
-            host_state = ser.state_to_host(state)
-            bf16_keys = {
-                k for (p, l) in jax.tree_util.tree_flatten_with_path(state)[0]
-                if l is not None and getattr(l, "dtype", None) == jax.numpy.bfloat16
-                for k in [jax.tree_util.keystr(p)]}
-        payload = {"state": host_state, "bf16_keys": bf16_keys,
-                   "meta": meta or {}}
-        if self.cfg.mode is InSituMode.SYNC:
-            with self.telemetry.span("insitu-sync/checkpoint", step=step):
-                self._write_task(step, payload)
-        else:
-            assert self._engine is not None
-            from repro.core.staging import StagedItem
-            self._engine.staging.put(StagedItem(step, "checkpoint", payload))
+        """Checkpoint one training state via the registered pipeline."""
+        self.runtime.submit(step, {"ckpt_state": lambda: (state, meta)})
 
     def maybe_save(self, step: int, state: PyTree,
                    meta: Optional[dict] = None) -> bool:
@@ -153,7 +174,7 @@ class CheckpointManager:
         self.save(step, state, meta)
         return True
 
-    # -- read path -----------------------------------------------------------
+    # -- read path ------------------------------------------------------------
 
     def list_steps(self) -> list[int]:
         out = []
@@ -179,27 +200,12 @@ class CheckpointManager:
             state = ser.read_state(d, template, shardings)
         return step, state
 
-    # -- lifecycle --------------------------------------------------------------
+    # -- lifecycle ------------------------------------------------------------
 
     def finish(self) -> None:
-        if self._engine is not None:
-            self._engine.finish()
+        if self._owns_runtime:
+            self.runtime.drain()
 
     def wait_idle(self, timeout: float = 600.0) -> None:
         """Block until queued checkpoints are written (tests/end-of-run)."""
-        if self._engine is None:
-            return
-        t0 = time.time()
-        while len(self._engine.staging) and time.time() - t0 < timeout:
-            time.sleep(0.01)
-        # one more grace period for in-flight task fn
-        while (self._engine.staging.puts > self._engine.staging.gets
-               and time.time() - t0 < timeout):
-            time.sleep(0.01)
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            with self._lock:
-                done = len(self.reports)
-            if done >= self._engine.staging.gets:
-                return
-            time.sleep(0.01)
+        self.runtime.wait_idle(timeout=timeout)

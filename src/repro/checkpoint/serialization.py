@@ -76,15 +76,18 @@ def state_to_host(state: PyTree) -> dict[str, np.ndarray | Compressed]:
     return out
 
 
-def write_blobs(host_state: dict[str, np.ndarray], directory: str, *,
-                lossless: str = "zlib", eps: float = 1e-2,
-                lossy_policy: Optional[Callable[[str], bool]] = None,
-                bf16_keys: Optional[set] = None) -> dict[str, dict]:
-    """Compress + write one blob per leaf; returns manifest leaf entries."""
-    os.makedirs(directory, exist_ok=True)
-    entries: dict[str, dict] = {}
+def encode_blobs(host_state: dict[str, np.ndarray], *,
+                 lossless: str = "zlib", eps: float = 1e-2,
+                 lossy_policy: Optional[Callable[[str], bool]] = None,
+                 bf16_keys: Optional[set] = None
+                 ) -> dict[str, tuple[bytes, dict]]:
+    """Lossless-encode stage: leaf -> (framed blob, manifest entry sans file).
+
+    Pure compute, no I/O — this is the pipeline's host stage; the sink
+    (``write_encoded``) owns the filesystem.
+    """
+    encoded: dict[str, tuple[bytes, dict]] = {}
     for key, arr in host_state.items():
-        fn = _fname(key)
         if isinstance(arr, Compressed):
             # HYBRID path: the lossy stage already ran on device; only the
             # lossless stage happens here.
@@ -103,11 +106,32 @@ def write_blobs(host_state: dict[str, np.ndarray], directory: str, *,
                 blob, _ = lossy.compress_tensor(a, eps=eps, lossless=lossless)
             else:
                 blob, _ = codecs.encode(arr, lossless)
+        encoded[key] = (blob, {"bytes": len(blob), "lossy": is_lossy,
+                               "raw_bytes": raw_bytes, "bf16": is_bf16})
+    return encoded
+
+
+def write_encoded(directory: str,
+                  encoded: dict[str, tuple[bytes, dict]]) -> dict[str, dict]:
+    """Write stage: one file per encoded leaf; returns manifest leaf entries."""
+    os.makedirs(directory, exist_ok=True)
+    entries: dict[str, dict] = {}
+    for key, (blob, ent) in encoded.items():
+        fn = _fname(key)
         with open(os.path.join(directory, fn), "wb") as f:
             f.write(blob)
-        entries[key] = {"file": fn, "bytes": len(blob), "lossy": is_lossy,
-                        "raw_bytes": raw_bytes, "bf16": is_bf16}
+        entries[key] = {"file": fn, **ent}
     return entries
+
+
+def write_blobs(host_state: dict[str, np.ndarray], directory: str, *,
+                lossless: str = "zlib", eps: float = 1e-2,
+                lossy_policy: Optional[Callable[[str], bool]] = None,
+                bf16_keys: Optional[set] = None) -> dict[str, dict]:
+    """Encode + write in one call (the pipeline splits the two stages)."""
+    return write_encoded(directory, encode_blobs(
+        host_state, lossless=lossless, eps=eps, lossy_policy=lossy_policy,
+        bf16_keys=bf16_keys))
 
 
 def write_manifest(directory: str, step: int, entries: dict[str, dict],

@@ -1,8 +1,12 @@
 """The paper's contribution: in-situ task placement for accelerator loops."""
 from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
                                run_workflow)
+from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
+                                Stage, TaskResult, run_pipeline)
 from repro.core.staging import StagedItem, StagingBuffer
 from repro.core.telemetry import Telemetry
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
+           "PipelineRuntime", "PipelineTask", "Placement", "Stage",
+           "TaskResult", "run_pipeline",
            "StagedItem", "StagingBuffer", "Telemetry"]

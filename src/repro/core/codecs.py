@@ -128,3 +128,28 @@ def compression_ratio(arr: np.ndarray, codec: str) -> CompressionStats:
     _, comp, _ = _COMPRESSORS[codec]
     raw = arr.tobytes()
     return CompressionStats(codec, len(raw), len(comp(raw)))
+
+
+# ---------------------------------------------------------------------------
+# registry adapter: every framed lossless codec is a repro.core.compression
+# Codec (exact roundtrip, self-describing frame).
+# ---------------------------------------------------------------------------
+
+from repro.core import compression as _compression  # noqa: E402
+
+
+class FramedLosslessCodec:
+    lossy = False
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        return encode(arr, self.name)[0]
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        return decode(blob)
+
+
+for _name in list(_COMPRESSORS):
+    _compression.register(FramedLosslessCodec(_name))

@@ -1,64 +1,55 @@
-"""InSituEngine — the paper's three in-situ modes as a training-loop runtime.
+"""InSituEngine — compatibility shim over ``repro.core.runtime``.
 
-Fig. 1 of the paper, mapped to a JAX device loop:
+Fig. 1 of the paper, mapped to a JAX device loop (see runtime.py for the
+authoritative semantics — SYNC/ASYNC/HYBRID are scheduling policies of one
+shared worker-pool scheduler):
 
   SYNC   (Fig. 1a): the loop *blocks*: device->host hand-off, then the task
-         runs inline on the loop thread. The device sits idle meanwhile —
-         exactly the GPU stall the paper's NSight timelines show.
+         runs inline on the loop thread — the GPU stall the paper's NSight
+         timelines show. Sharded sync firings ride the shared pool behind a
+         latch.
   ASYNC  (Fig. 1b): the loop blocks only for the hand-off (ADIOS2-send
-         analog), then enqueues the payload on the bounded StagingBuffer;
-         p_i dedicated worker threads consume it concurrently with
-         subsequent device steps. A slow in-situ side eventually exerts
-         backpressure (F3).
-  HYBRID (Fig. 1c): a deeply-coupled device stage (the Pallas spectral lossy
-         kernel, compiled *into the train step* like NEKO's on-GPU lossy
-         pass) shrinks the payload ~50x; the hand-off moves the small
-         residue; the lossless stage runs async on the host.
+         analog); p_i pool workers consume the bounded staging ring
+         concurrently with subsequent device steps. A slow in-situ side
+         eventually exerts backpressure (F3).
+  HYBRID (Fig. 1c): a deeply-coupled device stage shrinks the payload; the
+         hand-off moves the small residue; host stages run async.
 
 The MPMD resource split p_o + p_i = p_t becomes a host-thread split: the
-training loop plus data pipeline hold p_o threads, the engine owns p_i
-workers. Host codecs and numpy release the GIL, so the overlap is real
-in-process (measured, not assumed — telemetry records every phase).
+training loop plus data pipeline hold p_o threads, the runtime pool owns
+p_i workers. Host codecs and numpy release the GIL, so the overlap is real
+in-process.
+
+This module keeps the original task-list API (``InSituTask`` with a single
+``fn``); each task lowers to a single-sink ``PipelineTask``. New code
+should declare pipelines against ``repro.core.runtime`` directly.
 """
 from __future__ import annotations
 
-import enum
-import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-import jax
-import numpy as np
-
-from repro.core.staging import Closed, StagedItem, StagingBuffer
+from repro.core.runtime import (Placement, PipelineRuntime, PipelineTask,
+                                TaskResult, run_pipeline, split_payload)
 from repro.core.telemetry import Telemetry
 
 PyTree = Any
 
-
-class InSituMode(enum.Enum):
-    SYNC = "sync"
-    ASYNC = "async"
-    HYBRID = "hybrid"
+# The paper's three placements; kept under the historical name.
+InSituMode = Placement
 
 
 @dataclass
 class InSituTask:
-    """One in-situ task bound to a payload source.
+    """One in-situ task bound to a payload source (legacy single-fn form).
 
     ``source``   key into the providers dict the loop passes to on_step();
-                 the provider is only called on steps where the task fires
-                 (lazy: no device_get cost otherwise).
+                 the provider is only called on steps where the task fires.
     ``fn``       host-side work: fn(step, payload) -> result. For HYBRID
                  tasks the payload is the *device-reduced* representation.
     ``every``    fire period in steps (paper: image every 50 / every 10).
-    ``shards``   split each firing's payload into N independent sub-items
-                 (np.array_split on the leading axis) — models the paper's
-                 internally-parallel in-situ tasks (image generation over
-                 p_i ranks): async shards spread over the workers; sync
-                 shards run on a transient pool of p_i threads while the
-                 loop blocks (the "GPUs wait for the CPU ranks" case).
+    ``shards``   split each firing's payload into N independent sub-items —
+                 the paper's internally-parallel in-situ tasks.
     """
     name: str
     source: str
@@ -71,144 +62,60 @@ class InSituTask:
         return step % self.every == 0
 
     def split(self, payload: Any) -> list:
-        if self.shards <= 1:
-            return [payload]
-        if isinstance(payload, np.ndarray):
-            return np.array_split(payload, self.shards)
-        return [payload]  # non-array payloads: no split
+        return split_payload(payload, self.shards)
 
-
-@dataclass
-class TaskResult:
-    task: str
-    step: int
-    result: Any
-    worker: str
-    duration_s: float
+    def to_pipeline(self) -> PipelineTask:
+        """Lower to the runtime's declarative form: the fn is the sink."""
+        return PipelineTask(self.name, self.source, sink=self.fn,
+                            placement=self.mode, every=self.every,
+                            shards=self.shards)
 
 
 class InSituEngine:
-    """Owns the staging ring + p_i workers; the loop calls on_step()/finish()."""
+    """Thin shim: owns a PipelineRuntime; the loop calls on_step()/finish()."""
 
     def __init__(self, tasks: list[InSituTask], *, p_i: int = 2,
                  staging_capacity: int = 4,
                  telemetry: Optional[Telemetry] = None) -> None:
         self.tasks = list(tasks)
         self.p_i = p_i
-        self.telemetry = telemetry or Telemetry()
-        self.staging = StagingBuffer(staging_capacity, self.telemetry)
-        self.results: list[TaskResult] = []
-        self.errors: list[tuple[str, int, BaseException]] = []
-        self._lock = threading.Lock()
-        self._by_name = {t.name: t for t in self.tasks}
-        self._workers: list[threading.Thread] = []
-        needs_workers = any(t.mode in (InSituMode.ASYNC, InSituMode.HYBRID)
-                            for t in self.tasks)
-        if needs_workers:
-            for i in range(p_i):
-                th = threading.Thread(target=self._worker_loop,
-                                      name=f"insitu-{i}", daemon=True)
-                th.start()
-                self._workers.append(th)
+        self.runtime = PipelineRuntime(
+            [t.to_pipeline() for t in self.tasks], workers=p_i,
+            staging_capacity=staging_capacity, telemetry=telemetry)
 
-    # -- worker side -----------------------------------------------------------
+    # the engine's public state is the runtime's state
+    @property
+    def telemetry(self) -> Telemetry:
+        return self.runtime.telemetry
 
-    def _worker_loop(self) -> None:
-        while True:
-            try:
-                item = self.staging.get()
-            except Closed:
-                return
-            task = self._by_name[item.name]
-            t0 = time.perf_counter()
-            try:
-                with self.telemetry.span(f"insitu-async/{task.name}",
-                                         step=item.step):
-                    res = task.fn(item.step, item.payload)
-                dt = time.perf_counter() - t0
-                with self._lock:
-                    self.results.append(TaskResult(
-                        task.name, item.step, res,
-                        threading.current_thread().name, dt))
-            except BaseException as e:  # noqa: BLE001 - keep workers alive
-                with self._lock:
-                    self.errors.append((task.name, item.step, e))
+    @property
+    def staging(self):
+        return self.runtime.staging
 
-    # -- loop side ---------------------------------------------------------------
+    @property
+    def results(self) -> list[TaskResult]:
+        return self.runtime.results
 
-    def _handoff(self, step: int, task: InSituTask,
-                 providers: dict[str, Callable[[], Any]]) -> Any:
-        """Device->host transfer: the only part async mode blocks on."""
-        with self.telemetry.span("step/handoff", step=step, task=task.name):
-            payload = providers[task.source]()
-            payload = jax.tree.map(
-                lambda x: np.asarray(x) if hasattr(x, "dtype") else x, payload)
-        return payload
+    @property
+    def errors(self) -> list[tuple[str, int, BaseException]]:
+        return self.runtime.errors
 
     def on_step(self, step: int,
                 providers: dict[str, Callable[[], Any]]) -> None:
         """Called once per training step, after the step is dispatched."""
-        for task in self.tasks:
-            if not task.fires(step) or task.source not in providers:
-                continue
-            payload = self._handoff(step, task, providers)
-            pieces = task.split(payload)
-            if task.mode is InSituMode.SYNC:
-                t0 = time.perf_counter()
-                with self.telemetry.span(f"insitu-sync/{task.name}", step=step):
-                    if len(pieces) > 1:
-                        # internally-parallel sync task on p_i threads
-                        import concurrent.futures as cf
-                        with cf.ThreadPoolExecutor(self.p_i) as pool:
-                            res = list(pool.map(
-                                lambda pc: task.fn(step, pc), pieces))
-                    else:
-                        res = task.fn(step, pieces[0])
-                with self._lock:
-                    self.results.append(TaskResult(
-                        task.name, step, res,
-                        threading.current_thread().name,
-                        time.perf_counter() - t0))
-            else:  # ASYNC and the host half of HYBRID queue identically
-                for pc in pieces:
-                    self.staging.put(StagedItem(step, task.name, pc))
+        self.runtime.submit(step, providers)
 
     def finish(self, timeout: float = 600.0) -> None:
         """Drain the ring and join workers (the paper's non-overlapped tail)."""
-        with self.telemetry.span("insitu/drain"):
-            self.staging.close()
-            for th in self._workers:
-                th.join(timeout=timeout)
-
-    # -- reporting ------------------------------------------------------------------
+        self.runtime.drain(timeout=timeout)
 
     def report(self) -> dict[str, Any]:
-        rep: dict[str, Any] = dict(self.telemetry.step_overlap_report())
-        rep["n_results"] = len(self.results)
-        rep["n_errors"] = len(self.errors)
-        rep["staging_puts"] = self.staging.puts
-        return rep
+        return self.runtime.report()
 
-
-# ---------------------------------------------------------------------------
-# Workflow driver: app loop + engine, used by examples/benchmarks/tests.
-# ---------------------------------------------------------------------------
 
 def run_workflow(n_steps: int,
                  app_step: Callable[[int], dict[str, Callable[[], Any]]],
                  engine: InSituEngine,
                  block_each_step: bool = True) -> Telemetry:
-    """Run ``n_steps`` of the application with the in-situ engine attached.
-
-    ``app_step(step)`` dispatches one device step and returns the providers
-    dict (lazy payload getters). With ``block_each_step`` the loop waits for
-    the device result inside a ``step/compute`` span (measurement mode, used
-    by benchmarks so device/in-situ attribution is exact).
-    """
-    tm = engine.telemetry
-    for step in range(n_steps):
-        with tm.span("step/compute", step=step):
-            providers = app_step(step)
-        engine.on_step(step, providers)
-    engine.finish()
-    return tm
+    """Run ``n_steps`` of the application with the in-situ engine attached."""
+    return run_pipeline(n_steps, app_step, engine.runtime)

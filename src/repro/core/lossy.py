@@ -145,6 +145,35 @@ def decompress_blob(blob: bytes) -> np.ndarray | jax.Array:
     return codecs.decode(blob)
 
 
+class SpectralLossyCodec:
+    """Registry adapter: the device lossy stage + host lossless stage as one
+    ``repro.core.compression`` Codec. Roundtrip error is relative-L2 bounded
+    by ``error_bound()`` (threshold + int8 quantization terms)."""
+
+    lossy = True
+
+    def __init__(self, name: str = "spectral", eps: float = 1e-2,
+                 lossless: str = "zlib") -> None:
+        self.name = name
+        self.eps = eps
+        self.lossless = lossless
+
+    def encode(self, arr) -> bytes:
+        return compress_tensor(arr, self.eps, self.lossless)[0]
+
+    def decode(self, blob: bytes) -> np.ndarray:
+        return np.asarray(decompress_tensor(blob))
+
+    def error_bound(self) -> float:
+        return error_bound(self.eps)
+
+
+from repro.core import compression as _compression  # noqa: E402
+
+_compression.register(SpectralLossyCodec())
+_compression.register(SpectralLossyCodec("spectral-coarse", eps=1e-1))
+
+
 def restore_tree(template: PyTree, blobs: dict[str, bytes]) -> PyTree:
     """Rebuild a pytree (same structure as template) from framed blobs."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)

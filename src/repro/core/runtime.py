@@ -1,0 +1,407 @@
+"""The pluggable in-situ pipeline runtime.
+
+Every in-situ consumer in the tree — training analytics, serving snapshots,
+checkpointing — is one declarative task
+
+    DeviceStage? -> Handoff -> [HostStage ...] -> Sink
+
+scheduled by a single shared worker-pool scheduler that owns the staging
+ring. The paper's three placements (Fig. 1) are *scheduling policies* of
+that one scheduler, not separate code paths:
+
+  SYNC   : the whole chain runs while the loop blocks (Fig. 1a). A
+           non-sharded firing executes inline on the loop thread; an
+           internally-parallel firing (``shards > 1``) fans its shards out
+           on the shared pool and the loop waits on a latch — no transient
+           executors are ever constructed.
+  ASYNC  : the loop blocks only for DeviceStage + Handoff; host stages and
+           the sink run on the pool, fed through the bounded staging ring
+           (Fig. 1b, the ADIOS2-send analog).
+  HYBRID : ASYNC scheduling for a task that declares a DeviceStage — the
+           deeply-coupled device kernel (Pallas spectral lossy) shrinks the
+           payload before the hand-off, so the D2H transfer ships the small
+           residue (Fig. 1c, the NEKO pattern).
+
+Backpressure on a full ring is a per-task policy:
+
+  block : wait for a slot; the stall is recorded as ``staging/wait`` —
+          the paper's F3 regime, and the default.
+  drop  : shed the firing and count it (``runtime.drops``; telemetry
+          counter ``staging/drop/<task>``) — for best-effort telemetry
+          tasks that must never stall the loop.
+  adapt : deliver, but under sustained pressure double the task's
+          *effective* firing period (capped) — the F3 mitigation: fire
+          less often when the in-situ side outgrows its resources.
+
+Telemetry: every firing records per-placement spans under the same names
+the pre-runtime engine used (``step/handoff``, ``insitu-sync/<task>``,
+``insitu-async/<task>``, ``insitu-device/<task>``, ``staging/wait``), so
+``Telemetry.step_overlap_report`` and every benchmark figure read
+identically; host stages additionally get ``stage/<task>/<stage>`` spans
+for per-stage attribution.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.staging import Closed, StagedItem, StagingBuffer
+from repro.core.telemetry import Telemetry
+
+PyTree = Any
+
+BACKPRESSURE_POLICIES = ("block", "drop", "adapt")
+
+
+class Placement(enum.Enum):
+    SYNC = "sync"
+    ASYNC = "async"
+    HYBRID = "hybrid"
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One named host stage: ``fn(step, payload) -> payload``."""
+    name: str
+    fn: Callable[[int, Any], Any]
+
+
+def default_handoff(payload: Any) -> Any:
+    """Device->host transfer: materialize every array leaf as numpy."""
+    return jax.tree.map(
+        lambda x: np.asarray(x) if hasattr(x, "dtype") else x, payload)
+
+
+def split_payload(payload: Any, shards: int) -> list:
+    """Shard a firing's payload on the leading axis (arrays only)."""
+    if shards <= 1:
+        return [payload]
+    if isinstance(payload, np.ndarray):
+        return np.array_split(payload, shards)
+    return [payload]  # non-array payloads: no split
+
+
+@dataclass
+class PipelineTask:
+    """Declarative pipeline: ``DeviceStage? -> Handoff -> [HostStage...] -> Sink``.
+
+    ``source``        key into the providers dict passed to ``submit()``; the
+                      provider is only called on steps where the task fires.
+    ``sink``          terminal consumer: ``sink(step, payload) -> result``;
+                      the result lands in ``runtime.results``.
+    ``host_stages``   ordered ``Stage`` chain run before the sink (same
+                      thread as the sink, per the placement).
+    ``device_stage``  optional ``fn(step, payload) -> payload`` run *before*
+                      the hand-off (the hybrid device kernel).
+    ``handoff``       device->host transfer; override when the transfer
+                      needs task-specific framing (e.g. checkpoint
+                      serialization's bf16 bookkeeping).
+    ``shards``        split each firing into N independent sub-items
+                      (models the paper's internally-parallel in-situ tasks).
+    ``backpressure``  ring-full policy: 'block' | 'drop' | 'adapt'.
+    """
+    name: str
+    source: str
+    sink: Callable[[int, Any], Any]
+    host_stages: Sequence[Stage] = ()
+    device_stage: Optional[Callable[[int, Any], Any]] = None
+    handoff: Callable[[Any], Any] = default_handoff
+    placement: Placement = Placement.ASYNC
+    every: int = 1
+    shards: int = 1
+    backpressure: str = "block"
+    adapt_after: int = 2        # consecutive full-ring firings before adapting
+    adapt_max_every: int = 64   # cap for the adapted firing period
+
+    def __post_init__(self) -> None:
+        if self.backpressure not in BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"backpressure must be one of {BACKPRESSURE_POLICIES}, "
+                f"got {self.backpressure!r}")
+        if self.every < 1:
+            raise ValueError("every must be >= 1")
+
+
+@dataclass
+class TaskResult:
+    task: str
+    step: int
+    result: Any
+    worker: str
+    duration_s: float
+
+
+class _SyncGroup:
+    """Completion latch for a sharded SYNC firing executed on the pool."""
+
+    def __init__(self, n: int) -> None:
+        self.results: list = [None] * n
+        self.errors: list[BaseException] = []
+        self._remaining = n
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+
+    def complete(self, shard: int, result: Any,
+                 error: Optional[BaseException] = None) -> None:
+        with self._lock:
+            if error is not None:
+                self.errors.append(error)
+            else:
+                self.results[shard] = result
+            self._remaining -= 1
+            if self._remaining == 0:
+                self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+
+class PipelineRuntime:
+    """The single scheduler: staging ring + shared ``workers`` pool.
+
+    Tasks are registered (``register``) and fired (``submit``); the runtime
+    owns placement, backpressure, telemetry spans, and the drain protocol.
+    """
+
+    def __init__(self, tasks: Sequence[PipelineTask] = (), *,
+                 workers: int = 2, staging_capacity: int = 4,
+                 telemetry: Optional[Telemetry] = None) -> None:
+        self.workers = workers
+        self.telemetry = telemetry or Telemetry()
+        self.staging = StagingBuffer(staging_capacity, self.telemetry)
+        self.results: list[TaskResult] = []
+        self.errors: list[tuple[str, int, BaseException]] = []
+        self.drops: dict[str, int] = {}
+        self._tasks: dict[str, PipelineTask] = {}
+        self._every: dict[str, int] = {}
+        self._pressure: dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queued = 0       # async items enqueued on the ring
+        self._finished = 0     # async items completed (result or error)
+        self._threads: list[threading.Thread] = []
+        for t in tasks:
+            self.register(t)
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, task: PipelineTask) -> PipelineTask:
+        """Add a pipeline to the schedule; new workloads start here."""
+        if task.name in self._tasks:
+            raise ValueError(f"task {task.name!r} already registered")
+        self._tasks[task.name] = task
+        self._every[task.name] = int(task.every)
+        self._pressure[task.name] = 0
+        self.drops[task.name] = 0
+        if task.placement is not Placement.SYNC or task.shards > 1:
+            self._ensure_pool()
+        return task
+
+    @property
+    def tasks(self) -> list[PipelineTask]:
+        return list(self._tasks.values())
+
+    def effective_every(self, name: str) -> int:
+        """Current firing period (grows under the 'adapt' policy)."""
+        return self._every[name]
+
+    def _ensure_pool(self) -> None:
+        while len(self._threads) < self.workers:
+            th = threading.Thread(target=self._worker_loop,
+                                  name=f"insitu-{len(self._threads)}",
+                                  daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    # -- worker side ----------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            try:
+                item = self.staging.get()
+            except Closed:
+                return
+            task = self._tasks[item.name]
+            if item.group is not None:
+                self._run_sync_shard(task, item)
+            else:
+                self._run_async_item(task, item)
+
+    def _run_chain(self, task: PipelineTask, step: int, payload: Any) -> Any:
+        for stage in task.host_stages:
+            with self.telemetry.span(f"stage/{task.name}/{stage.name}",
+                                     step=step):
+                payload = stage.fn(step, payload)
+        return task.sink(step, payload)
+
+    def _run_async_item(self, task: PipelineTask, item: StagedItem) -> None:
+        t0 = time.perf_counter()
+        try:
+            with self.telemetry.span(f"insitu-async/{task.name}",
+                                     step=item.step):
+                res = self._run_chain(task, item.step, item.payload)
+            with self._cv:
+                self.results.append(TaskResult(
+                    task.name, item.step, res,
+                    threading.current_thread().name,
+                    time.perf_counter() - t0))
+                self._finished += 1
+                self._cv.notify_all()
+        except BaseException as e:  # noqa: BLE001 - keep workers alive
+            with self._cv:
+                self.errors.append((task.name, item.step, e))
+                self._finished += 1
+                self._cv.notify_all()
+
+    def _run_sync_shard(self, task: PipelineTask, item: StagedItem) -> None:
+        try:
+            res = self._run_chain(task, item.step, item.payload)
+        except BaseException as e:  # noqa: BLE001 - latch must always fire
+            item.group.complete(item.shard, None, e)
+        else:
+            item.group.complete(item.shard, res)
+
+    # -- loop side ------------------------------------------------------------
+
+    def submit(self, step: int,
+               providers: dict[str, Callable[[], Any]]) -> None:
+        """Fire every registered task due at ``step`` with a provider."""
+        for task in self._tasks.values():
+            if step % self._every[task.name]:
+                continue
+            if task.source not in providers:
+                continue
+            self._fire(step, task, providers[task.source])
+
+    def _fire(self, step: int, task: PipelineTask,
+              provider: Callable[[], Any]) -> None:
+        if task.device_stage is not None:
+            with self.telemetry.span(f"insitu-device/{task.name}", step=step):
+                payload = task.device_stage(step, provider())
+            with self.telemetry.span("step/handoff", step=step,
+                                     task=task.name):
+                payload = task.handoff(payload)
+        else:
+            with self.telemetry.span("step/handoff", step=step,
+                                     task=task.name):
+                payload = task.handoff(provider())
+        pieces = split_payload(payload, task.shards)
+        if task.placement is Placement.SYNC:
+            self._run_sync(step, task, pieces)
+        else:
+            self._enqueue(step, task, pieces)
+
+    def _run_sync(self, step: int, task: PipelineTask, pieces: list) -> None:
+        t0 = time.perf_counter()
+        with self.telemetry.span(f"insitu-sync/{task.name}", step=step):
+            if len(pieces) > 1:
+                # internally-parallel sync firing: shards ride the shared
+                # pool; the loop blocks on the latch (the "GPUs wait for
+                # the CPU ranks" case) — no per-firing executor.
+                group = _SyncGroup(len(pieces))
+                for i, pc in enumerate(pieces):
+                    self.staging.put(StagedItem(step, task.name, pc,
+                                                group=group, shard=i))
+                group.wait()
+                if group.errors:
+                    raise group.errors[0]
+                res = group.results
+            else:
+                res = self._run_chain(task, step, pieces[0])
+        with self._lock:
+            self.results.append(TaskResult(
+                task.name, step, res, threading.current_thread().name,
+                time.perf_counter() - t0))
+
+    def _enqueue(self, step: int, task: PipelineTask, pieces: list) -> None:
+        for pc in pieces:
+            item = StagedItem(step, task.name, pc)
+            if task.backpressure == "block":
+                self.staging.put(item)
+                self._note_queued()
+            elif task.backpressure == "drop":
+                if self.staging.try_put(item):
+                    self._note_queued()
+                else:
+                    with self._lock:
+                        self.drops[task.name] += 1
+                    self.telemetry.count(f"staging/drop/{task.name}")
+            else:  # adapt
+                if self.staging.try_put(item):
+                    self._note_queued()
+                    self._pressure[task.name] = 0
+                else:
+                    self._pressure[task.name] += 1
+                    if self._pressure[task.name] >= task.adapt_after:
+                        self._pressure[task.name] = 0
+                        new = min(self._every[task.name] * 2,
+                                  task.adapt_max_every)
+                        if new != self._every[task.name]:
+                            self._every[task.name] = new
+                            self.telemetry.count(
+                                f"backpressure/adapt/{task.name}")
+                    self.staging.put(item)   # still deliver this firing
+                    self._note_queued()
+
+    def _note_queued(self) -> None:
+        with self._cv:
+            self._queued += 1
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def wait_idle(self, timeout: float = 600.0) -> bool:
+        """Block until every enqueued async item has finished."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._finished < self._queued:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+        return True
+
+    def drain(self, timeout: float = 600.0) -> None:
+        """Drain the ring and join workers (the non-overlapped tail)."""
+        with self.telemetry.span("insitu/drain"):
+            self.staging.close()
+            for th in self._threads:
+                th.join(timeout=timeout)
+
+    # -- reporting ------------------------------------------------------------
+
+    def report(self) -> dict[str, Any]:
+        rep: dict[str, Any] = dict(self.telemetry.step_overlap_report())
+        rep["n_results"] = len(self.results)
+        rep["n_errors"] = len(self.errors)
+        rep["staging_puts"] = self.staging.puts
+        rep["drops"] = dict(self.drops)
+        rep["effective_every"] = {n: self._every[n] for n in self._tasks}
+        return rep
+
+
+# ---------------------------------------------------------------------------
+# Workflow driver: app loop + runtime, used by examples/benchmarks/tests.
+# ---------------------------------------------------------------------------
+
+def run_pipeline(n_steps: int,
+                 app_step: Callable[[int], dict[str, Callable[[], Any]]],
+                 runtime: PipelineRuntime) -> Telemetry:
+    """Run ``n_steps`` of the application with the pipeline runtime attached.
+
+    ``app_step(step)`` dispatches one device step and returns the providers
+    dict (lazy payload getters); the loop waits for the device result inside
+    a ``step/compute`` span so device/in-situ attribution is exact.
+    """
+    tm = runtime.telemetry
+    for step in range(n_steps):
+        with tm.span("step/compute", step=step):
+            providers = app_step(step)
+        runtime.submit(step, providers)
+    runtime.drain()
+    return tm

@@ -33,6 +33,8 @@ class StagedItem:
     step: int
     name: str
     payload: Any                      # pytree of np.ndarray / bytes / metadata
+    group: Any = None                 # _SyncGroup latch for sharded SYNC work
+    shard: int = 0                    # shard index within the group
     enqueued_at: float = field(default_factory=time.perf_counter)
 
 

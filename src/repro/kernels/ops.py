@@ -63,6 +63,25 @@ def spectral_decompress(c: Compressed) -> jax.Array:
     return ref.unblockize(xb, c.n_elements, c.shape, c.dtype)
 
 
+def spectral_compress_tree(state, eps: float = 1e-2,
+                           policy=None):
+    """Device stage of the hybrid checkpoint pipeline: lossy-compress every
+    leaf ``policy(keystr)`` selects; other leaves pass through untouched.
+
+    Returns the same tree structure with ``Compressed`` leaves where the
+    policy fired — the hand-off then ships int8 coefficients + scales.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    new_leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if leaf is not None and policy is not None and policy(key):
+            new_leaves.append(spectral_compress(leaf, eps))
+        else:
+            new_leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
 # ---------------------------------------------------------------------------
 # In-graph variant (hybrid in-situ: runs *inside* the jitted train step, like
 # NEKO's on-GPU lossy pass). Takes/returns plain arrays so it can live in a

@@ -15,8 +15,8 @@ import jax
 import numpy as np
 
 from repro.configs import base as configs
-from repro.core import InSituEngine, InSituMode, InSituTask, Telemetry
-from repro.core import analysis, codecs
+from repro.core import PipelineRuntime, PipelineTask, Placement, Telemetry
+from repro.core import analysis, compression
 from repro.models import params as P_lib
 from repro.models import transformer
 from repro.serving.engine import Request, ServingEngine
@@ -31,17 +31,20 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     engine = ServingEngine(cfg, params, slots=slots, prompt_len=16,
                            max_len=64)
     tm = Telemetry()
-    mode = InSituMode(insitu_mode)
 
     def snapshot_task(step, payload):
         flat = jax.tree_util.tree_flatten(payload)[0]
-        blob, st = codecs.encode(np.asarray(flat[0]).ravel()[:65536], "zlib")
-        return st.ratio
+        arr = np.asarray(flat[0]).ravel()[:65536]
+        blob = compression.get("zlib").encode(arr)
+        return (arr.nbytes - len(blob)) / max(arr.nbytes, 1)
 
-    insitu = InSituEngine(
-        [InSituTask("kv_snapshot", "serving_state", snapshot_task,
-                    mode=mode, every=4)],
-        p_i=2, telemetry=tm)
+    # serving-side in-situ: KV snapshot as a registered pipeline task,
+    # best-effort (drop on a full ring — never stall the decode loop)
+    insitu = PipelineRuntime(
+        [PipelineTask("kv_snapshot", "serving_state", sink=snapshot_task,
+                      placement=Placement(insitu_mode), every=4,
+                      backpressure="drop")],
+        workers=2, telemetry=tm)
 
     rng = np.random.default_rng(seed)
     requests = [
@@ -57,11 +60,11 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
         if any(a is not None for a in engine.active):
             with tm.span("step/compute", step=step):
                 engine.step()
-            insitu.on_step(step, engine.insitu_providers())
+            insitu.submit(step, engine.insitu_providers())
         step += 1
         if step > 10000:
             break
-    insitu.finish()
+    insitu.drain()
     total = time.perf_counter() - t0
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)

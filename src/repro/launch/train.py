@@ -219,8 +219,8 @@ def make_train_step(cfg: configs.ModelConfig, mesh: Mesh,
             dgath_ = jax.tree.map(lambda x: x[None], dgath_)
             return jax.lax.pmean(loss_, "pod"), reduced, dgath_, new_ef_
 
-        sm = jax.shard_map(
-            pod_local, mesh=mesh,
+        sm = sharding.shard_map(
+            pod_local, mesh,
             in_specs=(pspec_none, pm_specs, g_specs, ef_specs),
             out_specs=(P(), pspec_none, g_specs,
                        ef_specs if use_ef else P("pod")),
@@ -300,7 +300,8 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
                analytics_every: int = 10, p_i: int = 2,
                log: Callable[[str], None] = print) -> dict:
     from repro.checkpoint import CheckpointConfig, CheckpointManager
-    from repro.core import (InSituEngine, InSituMode, InSituTask, Telemetry)
+    from repro.core import (PipelineRuntime, PipelineTask, Placement,
+                            Telemetry)
     from repro.core import analysis
     from repro.data.pipeline import Prefetcher, batch_spec_for
     from repro.distributed.fault import StragglerMonitor
@@ -311,22 +312,24 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
     step_cfg = StepConfig()
     tm = Telemetry()
 
-    with jax.set_mesh(mesh):
+    with sharding.mesh_context(mesh):
         state = init_state(cfg, jax.random.PRNGKey(seed), step_cfg.opt)
         jitted, st_sh, b_sh, _ = jit_train_step(cfg, mesh, step_cfg, shape,
                                                 donate=False)
 
-        mode = InSituMode(insitu_mode)
-        tasks = [InSituTask(
+        # ONE runtime: analytics and checkpointing share the staging ring
+        # and the p_i worker pool (the paper's single p_o/p_i split).
+        placement = Placement(insitu_mode)
+        runtime = PipelineRuntime(workers=p_i, telemetry=tm)
+        runtime.register(PipelineTask(
             "analytics", "grads_summary",
-            lambda s, payload: analysis.gradient_health(payload, s),
-            mode=mode, every=analytics_every)]
-        engine = InSituEngine(tasks, p_i=p_i, telemetry=tm)
+            sink=lambda s, payload: analysis.gradient_health(payload, s),
+            placement=placement, every=analytics_every))
         mgr = None
         if ckpt_dir:
             mgr = CheckpointManager(
-                CheckpointConfig(ckpt_dir, mode=mode, every=ckpt_every),
-                telemetry=tm)
+                CheckpointConfig(ckpt_dir, mode=placement, every=ckpt_every),
+                runtime=runtime)
             if mgr.latest_step() is not None:
                 start, state = mgr.restore(state)
                 log(f"resumed from step {start}")
@@ -345,7 +348,7 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
             mon.observe(0, time.perf_counter() - t0)
             losses.append(loss)
             params_now = state["params"]
-            engine.on_step(i, {
+            runtime.submit(i, {
                 "grads_summary": lambda p=params_now: {
                     "params": np.asarray(
                         jax.tree.leaves(p)[0].astype(jnp.float32))},
@@ -355,12 +358,12 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
             if i % 10 == 0:
                 log(f"step {i} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
         pf.close()
-        engine.finish()
         if mgr is not None:
             mgr.wait_idle()
-            mgr.finish()
+        runtime.drain()
+    n_analytics = sum(1 for r in runtime.results if r.task == "analytics")
     return {"losses": losses, "telemetry": tm,
-            "insitu_results": len(engine.results),
+            "insitu_results": n_analytics,
             "straggler_report": mon.report()}
 
 

@@ -68,7 +68,11 @@ def update(grads: PyTree, state: AdamWState, params: PyTree,
     def leaf(p, g, m, v, pm):
         g = g.astype(jnp.float32) * clip
         m32 = m.astype(jnp.float32) * cfg.b1 + g * (1.0 - cfg.b1)
-        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1.0 - cfg.b2)
+        # max(v, 0): a lossy-restored second moment (error-bounded spectral
+        # codec on checkpoint moments) may carry eps-scale negative values;
+        # sqrt of those would poison the whole update with nan.
+        v32 = jnp.maximum(v.astype(jnp.float32), 0.0) * cfg.b2 \
+            + g * g * (1.0 - cfg.b2)
         upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
         p32 = pm if pm is not None else p.astype(jnp.float32)
         if cfg.weight_decay > 0:

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim: property tests run when hypothesis is
+installed and are skipped (not collection errors) when it is not.
+
+Usage in a test module:
+
+    from _hyp import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy-construction call chain."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):   # bare @settings
+            return args[0]
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # a real def (pytest refuses to collect marked lambdas), with
+            # no parameters so pytest doesn't demand the strategy kwargs
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

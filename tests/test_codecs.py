@@ -1,7 +1,7 @@
 """Lossless codec layer: framing, roundtrips, Table II-style ratios."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # optional-hypothesis shim
 
 from repro.core import codecs
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # optional-hypothesis shim
 
 from repro import optim
 from repro.optim import grad_compress, schedules
@@ -63,11 +63,12 @@ def test_int8_ring_mean_single_device_mesh():
     x = jnp.asarray(np.random.default_rng(0)
                     .standard_normal(256).astype(np.float32))
 
-    f = jax.shard_map(
+    from repro.distributed import sharding
+    f = sharding.shard_map(
         lambda v: grad_compress.int8_ring_mean(v, "pod", 1),
-        mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+        mesh, in_specs=jax.sharding.PartitionSpec(),
         out_specs=jax.sharding.PartitionSpec(), check_vma=False)
-    with jax.set_mesh(mesh):
+    with sharding.mesh_context(mesh):
         out = f(x)
     amax = float(jnp.max(jnp.abs(x)))
     assert float(jnp.max(jnp.abs(out - x))) <= amax / 127.0

@@ -1,0 +1,212 @@
+"""PipelineRuntime: placement policies, backpressure, stages, codec registry.
+
+The tentpole contracts of the unified runtime:
+  * one scheduler — SYNC / ASYNC / HYBRID are policies, sharded SYNC work
+    rides the shared pool (no transient executors)
+  * backpressure policies: block (staging/wait), drop (counted), adapt
+    (the effective firing period lengthens under sustained pressure)
+  * declarative stage chains get per-stage telemetry spans
+  * every codec in the unified registry round-trips (exactly, or within
+    its declared error bound)
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import compression
+from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
+                                Stage, run_pipeline)
+
+
+def _loop(runtime, n, step_s=0.0, payload=None):
+    payload = payload if payload is not None else np.zeros(8)
+
+    def app_step(i):
+        if step_s:
+            time.sleep(step_s)   # device step: host-idle wait
+        return {"x": lambda: payload}
+
+    return run_pipeline(n, app_step, runtime)
+
+
+# -- placement scheduling -----------------------------------------------------
+
+def test_sync_sharded_firings_reuse_the_shared_pool():
+    """Sharded SYNC work runs on the persistent insitu-* workers."""
+    seen = []
+
+    def work(step, piece):
+        seen.append(threading.current_thread().name)
+        return piece.sum()
+
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=work, placement=Placement.SYNC,
+                      shards=4)],
+        workers=2)
+    _loop(rt, 3, payload=np.ones(64))
+    assert len(seen) == 12                       # 3 firings x 4 shards
+    assert all(name.startswith("insitu-") for name in seen)
+    assert len(set(seen)) <= 2                   # the pool, not new threads
+    # the loop still observed each firing as one blocking (sync) result
+    assert len(rt.results) == 3
+    assert rt.telemetry.total("insitu-sync/") > 0
+    before = threading.active_count()
+    _loop_again = _loop(rt, 0)                   # no thread growth afterwards
+    assert threading.active_count() == before
+
+
+def test_sync_sharded_results_preserve_shard_order():
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, pc: float(pc[0]),
+                      placement=Placement.SYNC, shards=3)],
+        workers=2)
+    _loop(rt, 1, payload=np.asarray([0.0] * 10 + [1.0] * 10 + [2.0] * 10))
+    assert rt.results[0].result == [0.0, 1.0, 2.0]
+
+
+def test_host_stage_chain_runs_in_order_with_spans():
+    order = []
+
+    def stage_a(step, p):
+        order.append("a")
+        return p + 1
+
+    def stage_b(step, p):
+        order.append("b")
+        return p * 10
+
+    rt = PipelineRuntime(
+        [PipelineTask("chain", "x",
+                      host_stages=(Stage("add", stage_a),
+                                   Stage("mul", stage_b)),
+                      sink=lambda s, p: order.append("sink") or p,
+                      placement=Placement.ASYNC)],
+        workers=1)
+    _loop(rt, 1, payload=np.asarray(2.0))
+    assert order == ["a", "b", "sink"]
+    assert rt.results[0].result == 30.0
+    assert len(rt.telemetry.spans("stage/chain/add")) == 1
+    assert len(rt.telemetry.spans("stage/chain/mul")) == 1
+
+
+def test_device_stage_runs_before_handoff():
+    events = []
+
+    rt = PipelineRuntime(
+        [PipelineTask("hy", "x",
+                      device_stage=lambda s, p: events.append("device") or p,
+                      handoff=lambda p: events.append("handoff") or p,
+                      sink=lambda s, p: events.append("sink") or None,
+                      placement=Placement.HYBRID)],
+        workers=1)
+    _loop(rt, 1)
+    rt.wait_idle()
+    assert events == ["device", "handoff", "sink"]
+    assert rt.telemetry.total("insitu-device/hy") > 0
+
+
+# -- backpressure policies ----------------------------------------------------
+
+def _pressured(policy, *, n=12, workers=1, task_s=0.03, every=1):
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x",
+                      sink=lambda s, p: time.sleep(task_s),
+                      placement=Placement.ASYNC, every=every,
+                      backpressure=policy, adapt_after=2)],
+        workers=workers, staging_capacity=1)
+    _loop(rt, n, step_s=0.001)
+    return rt
+
+def test_block_policy_records_staging_wait():
+    rt = _pressured("block")
+    assert rt.telemetry.total("staging/wait") > 0
+    assert len(rt.results) == 12                 # nothing lost
+    assert rt.drops["t"] == 0
+
+
+def test_drop_policy_counts_drops_and_never_stalls():
+    rt = _pressured("drop")
+    assert rt.drops["t"] > 0
+    assert len(rt.results) + rt.drops["t"] == 12
+    assert rt.telemetry.counters()["staging/drop/t"] == rt.drops["t"]
+    # a dropping producer must not have blocked on the ring
+    assert rt.telemetry.total("staging/wait") == 0
+
+
+def test_adapt_policy_lengthens_every_under_sustained_pressure():
+    rt = _pressured("adapt", n=24)
+    assert rt.effective_every("t") > 1           # the runtime backed off
+    assert rt.report()["effective_every"]["t"] == rt.effective_every("t")
+    # adapted-but-delivered: every accepted firing still produced a result
+    assert len(rt.results) == rt.staging.puts
+
+
+def test_adapt_policy_is_quiet_without_pressure():
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: None,
+                      placement=Placement.ASYNC, backpressure="adapt")],
+        workers=2, staging_capacity=8)
+    _loop(rt, 10, step_s=0.002)
+    assert rt.effective_every("t") == 1
+
+def test_bad_backpressure_policy_rejected():
+    with pytest.raises(ValueError):
+        PipelineTask("t", "x", sink=lambda s, p: None, backpressure="shrug")
+
+
+def test_duplicate_registration_rejected():
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: None)], workers=1)
+    with pytest.raises(ValueError):
+        rt.register(PipelineTask("t", "x", sink=lambda s, p: None))
+    rt.drain()
+
+
+# -- codec registry -----------------------------------------------------------
+
+def _smooth_signal(n=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0, 8 * np.pi, n)
+    return (np.sin(t) + 0.3 * np.sin(5.1 * t)
+            + 0.01 * rng.standard_normal(n)).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", compression.available())
+def test_registry_roundtrip_every_codec(name):
+    codec = compression.get(name)
+    x = _smooth_signal()
+    blob = codec.encode(x)
+    out = np.asarray(codec.decode(blob))
+    if codec.lossy:
+        out = out.ravel()[: x.size].reshape(x.shape)
+        rel = float(np.linalg.norm(out - x) / np.linalg.norm(x))
+        assert rel <= codec.error_bound(), (name, rel)
+    else:
+        np.testing.assert_array_equal(out, x)
+        assert out.dtype == x.dtype
+
+
+def test_registry_knows_lossless_from_lossy():
+    names = set(compression.available())
+    assert {"zlib", "bz2", "none"} <= set(compression.available(lossy=False))
+    assert {"spectral", "int8-ef"} <= set(compression.available(lossy=True))
+    assert (set(compression.available(lossy=False))
+            | set(compression.available(lossy=True))) == names
+
+
+def test_registry_unknown_codec_message():
+    with pytest.raises(KeyError, match="available"):
+        compression.get("nope")
+
+
+def test_registry_rejects_duplicate_names():
+    class Dummy:
+        name = "zlib"
+        lossy = False
+        def encode(self, arr): return b""
+        def decode(self, blob): return np.zeros(1)
+
+    with pytest.raises(ValueError):
+        compression.register(Dummy())

@@ -2,15 +2,15 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import base
 from repro.distributed import sharding
 from repro.models import params as P_lib, transformer
 from repro.serving import kvcache
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = sharding.abstract_mesh((16, 16), ("data", "model"))
+POD_MESH = sharding.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_divisible_dims_shard():
