@@ -1,0 +1,155 @@
+"""Microbenchmark: blocking vs pipelined (dispatch-only) hand-off.
+
+The tentpole claim of the two-phase hand-off is that the loop "blocks only
+for the send" (paper Fig. 1b): the critical path pays the D2H *dispatch*,
+while the materialization drains on the consumer side, overlapped with the
+next device steps. This benchmark measures that directly on a synthetic
+multi-MB payload:
+
+  * the device step is a host-idle wait (``DeviceSim`` — the accelerator is
+    busy elsewhere), exactly like every other figure;
+  * the transfer materialization is ONE real host memcpy of the payload
+    (``payload.copy()``) — the D2H-into-pageable-memory analog. On this
+    container jax's CPU backend shares buffers with numpy (a ~µs
+    ``device_get``), so the copy stands in for the PCIe drain the same way
+    DeviceSim stands in for the accelerator;
+  * ``blocking`` runs the legacy path (``pipelined=False``): the loop
+    materializes inline under ``step/handoff``;
+  * ``pipelined`` runs the two-phase path: the loop records only
+    ``handoff/dispatch``; the worker pays ``handoff/materialize``.
+
+Also reports the chunk-parallel lossless codec throughput (serial vs shared
+codec pool) — the host-side half of the hot path.
+
+Emits CSV rows like every benchmark, and returns (plus writes, when run as
+a script) the ``BENCH_runtime.json`` perf artifact tracked from PR 2 on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import PipelineRuntime, PipelineTask, Placement, run_pipeline
+from repro.core import codecs
+
+ARTIFACT = "BENCH_runtime.json"
+
+
+def _transfer(payload: np.ndarray) -> np.ndarray:
+    """Materialize phase: one real host memcpy (the simulated D2H drain)."""
+    return payload.copy()
+
+
+def _run_mode(pipelined: bool, payload: np.ndarray, *, n: int,
+              step_s: float) -> dict:
+    rt = PipelineRuntime(
+        [PipelineTask("xfer", "x", sink=lambda s, p: p.nbytes,
+                      handoff=lambda p: _transfer(p),
+                      placement=Placement.ASYNC, pipelined=pipelined)],
+        workers=1, staging_capacity=2)
+    dev = common.DeviceSim(step_s)
+
+    def app_step(i):
+        dev()
+        return {"x": lambda: payload}
+
+    t0 = time.perf_counter()
+    run_pipeline(n, app_step, rt)
+    wall = time.perf_counter() - t0
+    assert not rt.errors, rt.errors[:1]
+    assert len(rt.results) == n
+    rep = rt.report()
+    rep["wall_s"] = wall
+    return rep
+
+
+def _codec_mb_s(payload: np.ndarray) -> dict:
+    mb = payload.nbytes / 1e6
+    t0 = time.perf_counter()
+    blob, _ = codecs.encode(payload, "zlib1")
+    serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    blob_p, _ = codecs.encode(payload, "zlib1", pool=codecs.codec_pool())
+    parallel = time.perf_counter() - t0
+    assert blob_p == blob                     # pool changes nothing but time
+    t0 = time.perf_counter()
+    out = codecs.decode(blob, pool=codecs.codec_pool())
+    decode_par = time.perf_counter() - t0
+    np.testing.assert_array_equal(out, payload)
+    return {"encode_serial_mb_s": mb / serial,
+            "encode_parallel_mb_s": mb / parallel,
+            "decode_parallel_mb_s": mb / decode_par}
+
+
+def run(quick: bool = True) -> dict:
+    mb = 8 if quick else 32
+    n, step_s = (6, 0.01) if quick else (16, 0.02)
+    payload = common.turbulence_field(mb << 18)   # f32: mb << 18 elems = mb MB
+
+    res = {name: _run_mode(pipelined, payload, n=n, step_s=step_s)
+           for name, pipelined in (("blocking", False), ("pipelined", True))}
+
+    crit = {name: r["handoff_s"] / n for name, r in res.items()}
+    speedup = crit["blocking"] / max(crit["pipelined"], 1e-9)
+    pl = res["pipelined"]
+    overlap = pl["handoff_materialize_s"] / max(
+        pl["handoff_materialize_s"] + pl["handoff_dispatch_s"], 1e-9)
+
+    common.row("handoff/blocking/critical_path", crit["blocking"] * 1e6,
+               f"measured;payload_mb={mb}")
+    common.row("handoff/pipelined/critical_path", crit["pipelined"] * 1e6,
+               f"measured;speedup={speedup:.1f}x;overlap={overlap:.3f}")
+    common.row("handoff/blocking/wall", res["blocking"]["wall_s"] * 1e6 / n,
+               "measured")
+    common.row("handoff/pipelined/wall", res["pipelined"]["wall_s"] * 1e6 / n,
+               "measured")
+
+    codec = _codec_mb_s(payload)
+    for k, v in codec.items():
+        common.row(f"codec/{k}", 1e6 / max(v, 1e-9), f"{v:.1f}MB/s")
+
+    # acceptance: the dispatch-only critical path must beat the blocking
+    # baseline by >= 2x (in practice it is orders of magnitude)
+    assert speedup >= 2.0, f"pipelined handoff only {speedup:.2f}x faster"
+
+    metrics = {
+        "payload_mb": mb,
+        "steps": n,
+        "critical_path_handoff_us": {k: v * 1e6 for k, v in crit.items()},
+        "handoff_speedup": speedup,
+        "overlap_fraction": overlap,
+        "wall_us_per_step": {k: r["wall_s"] * 1e6 / n
+                             for k, r in res.items()},
+        "codec_mb_s": codec,
+        "quick": quick,
+    }
+    return metrics
+
+
+def write_artifact(metrics: dict, path: str = ARTIFACT) -> None:
+    with open(path, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="artifact path; default: BENCH_runtime.json for "
+                         "--full runs (quick numbers are not comparable "
+                         "across PRs, so quick runs need an explicit --out)")
+    args = ap.parse_args()
+    m = run(quick=not args.full)
+    out = args.out or (ARTIFACT if args.full else None)
+    if out:
+        write_artifact(m, out)
+        print(f"# wrote {os.path.abspath(out)}")
+    else:
+        print("# quick run: pass --out (or --full) to write the artifact")

@@ -1,6 +1,9 @@
 """Benchmark entrypoint: one function per paper table/figure.
 
 ``python -m benchmarks.run [--full]`` prints CSV rows name,us_per_call,derived.
+The ``runtime`` bench additionally emits ``BENCH_runtime.json`` — the perf
+artifact (critical-path hand-off, overlap fraction, codec MB/s) tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -23,8 +26,8 @@ def main() -> None:
                             fig06_scaling_nodes, fig07_sync_compression,
                             fig08_hybrid_compression,
                             fig09_compression_scaling,
-                            fig10_12_qe_checkpoint, lossy_ratio, roofline,
-                            tab2_codecs)
+                            fig10_12_qe_checkpoint, handoff_overlap,
+                            lossy_ratio, roofline, tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -39,6 +42,7 @@ def main() -> None:
         ("tab2", tab2_codecs.run),
         ("lossy_ratio", lossy_ratio.run),
         ("roofline", roofline.run),
+        ("runtime", handoff_overlap.run),
     ]
     print("name,us_per_call,derived")
     failures = []
@@ -47,7 +51,12 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn(quick=quick)
+            result = fn(quick=quick)
+            if name == "runtime" and not quick:
+                # only a --full run refreshes the tracked perf artifact;
+                # quick-mode numbers are not comparable across PRs
+                handoff_overlap.write_artifact(result)
+                print(f"# wrote {handoff_overlap.ARTIFACT}")
             print(f"# {name} done in {time.time() - t0:.1f}s")
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))

@@ -5,12 +5,17 @@ hundreds of GB, written every few steps for walltime/failure reasons). The
 manager no longer forks the in-situ engine — it registers a single
 declarative pipeline into a ``repro.core.runtime.PipelineRuntime``:
 
-    DeviceStage  (HYBRID only) Pallas spectral-lossy on the moment leaves;
-                 the hand-off then ships int8 coefficients + scales
-                 (~4-50x smaller — paper Fig. 8/9, NEKO lossy-on-GPU)
-    Handoff      ``state_to_host`` + bf16-key bookkeeping (the part the
-                 device genuinely serializes on)
-    HostStage    'encode': lossless framing of every leaf (core codecs)
+    DeviceStage  (HYBRID only) Pallas spectral-lossy on the moment leaves —
+                 ONE fused dispatch for the whole tree; the hand-off then
+                 ships int8 coefficients + scales (~4-50x smaller — paper
+                 Fig. 8/9, NEKO lossy-on-GPU)
+    Handoff      two-phase: the loop only *dispatches* the D2H copies
+                 (``handoff/dispatch``); ``state_to_host`` + bf16-key
+                 bookkeeping materialize on the consumer side, overlapped
+                 with the next steps (JAX arrays are immutable, so the
+                 deferred snapshot is exact)
+    HostStage    'encode': lossless framing of every leaf (core codecs,
+                 chunk-parallel on the shared codec pool)
     Sink         'write': blobs -> manifest -> atomic directory rename,
                  then lock-guarded retention
 
@@ -66,6 +71,7 @@ class CheckpointConfig:
     lossy_moments: bool = True
     p_i: int = 2                      # workers for a manager-owned runtime
     staging_capacity: int = 2
+    chunk_parallel: bool = True       # fan leaf chunks out on the codec pool
 
 
 class CheckpointManager:
@@ -127,12 +133,21 @@ class CheckpointManager:
         return {"state": host_state, "bf16_keys": bf16_keys,
                 "meta": meta or {}}
 
+    def _codec_pool(self):
+        from repro.core import codecs
+        return codecs.codec_pool() if self.cfg.chunk_parallel else None
+
     def _encode_stage(self, step: int, payload: dict) -> dict:
-        """Host stage: lossless-encode every leaf (pure compute, no I/O)."""
+        """Host stage: lossless-encode every leaf (pure compute, no I/O).
+
+        Chunks of one large leaf compress in parallel on the shared codec
+        pool — the stdlib codecs release the GIL, so a single encode worker
+        saturates spare host cores without stealing runtime workers.
+        """
         encoded = ser.encode_blobs(
             payload["state"], lossless=self.cfg.lossless,
             eps=self.cfg.lossy_eps, lossy_policy=self._lossy_policy(),
-            bf16_keys=payload["bf16_keys"])
+            bf16_keys=payload["bf16_keys"], pool=self._codec_pool())
         return {"encoded": encoded, "meta": payload["meta"]}
 
     def _write_sink(self, step: int, payload: dict) -> ser.SaveReport:
@@ -197,7 +212,8 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.cfg.directory}")
         d = os.path.join(self.cfg.directory, f"step_{step:09d}")
         with self.telemetry.span("checkpoint/restore", step=step):
-            state = ser.read_state(d, template, shardings)
+            state = ser.read_state(d, template, shardings,
+                                   pool=self._codec_pool())
         return step, state
 
     # -- lifecycle ------------------------------------------------------------

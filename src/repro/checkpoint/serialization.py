@@ -79,19 +79,21 @@ def state_to_host(state: PyTree) -> dict[str, np.ndarray | Compressed]:
 def encode_blobs(host_state: dict[str, np.ndarray], *,
                  lossless: str = "zlib", eps: float = 1e-2,
                  lossy_policy: Optional[Callable[[str], bool]] = None,
-                 bf16_keys: Optional[set] = None
-                 ) -> dict[str, tuple[bytes, dict]]:
+                 bf16_keys: Optional[set] = None,
+                 pool=None) -> dict[str, tuple[bytes, dict]]:
     """Lossless-encode stage: leaf -> (framed blob, manifest entry sans file).
 
     Pure compute, no I/O — this is the pipeline's host stage; the sink
-    (``write_encoded``) owns the filesystem.
+    (``write_encoded``) owns the filesystem. ``pool`` fans the chunks of
+    each large leaf out across the shared codec executor (the stdlib codecs
+    release the GIL, so one encode worker compresses chunks in parallel).
     """
     encoded: dict[str, tuple[bytes, dict]] = {}
     for key, arr in host_state.items():
         if isinstance(arr, Compressed):
             # HYBRID path: the lossy stage already ran on device; only the
             # lossless stage happens here.
-            blob, st = lossy.frame_compressed(arr, lossless)
+            blob, st = lossy.frame_compressed(arr, lossless, pool)
             is_lossy, raw_bytes, is_bf16 = True, st.raw_bytes, False
         else:
             is_lossy = bool(lossy_policy and lossy_policy(key))
@@ -103,9 +105,10 @@ def encode_blobs(host_state: dict[str, np.ndarray], *,
                 if is_bf16:
                     a = np.asarray(jnp.asarray(arr.view(np.uint16))
                                    .view(jnp.bfloat16).astype(jnp.float32))
-                blob, _ = lossy.compress_tensor(a, eps=eps, lossless=lossless)
+                blob, _ = lossy.compress_tensor(a, eps=eps, lossless=lossless,
+                                                pool=pool)
             else:
-                blob, _ = codecs.encode(arr, lossless)
+                blob, _ = codecs.encode(arr, lossless, pool=pool)
         encoded[key] = (blob, {"bytes": len(blob), "lossy": is_lossy,
                                "raw_bytes": raw_bytes, "bf16": is_bf16})
     return encoded
@@ -158,8 +161,13 @@ def read_manifest(directory: str) -> dict:
 
 
 def read_state(directory: str, template: PyTree,
-               shardings: Optional[PyTree] = None) -> PyTree:
-    """Restore a pytree; re-place under ``shardings`` if given (elastic)."""
+               shardings: Optional[PyTree] = None,
+               pool=None) -> PyTree:
+    """Restore a pytree; re-place under ``shardings`` if given (elastic).
+
+    ``pool`` fans chunk decompression of v2 frames out per leaf (v1 frames
+    from old checkpoints decode on one thread, unchanged).
+    """
     manifest = read_manifest(directory)
     entries = manifest["leaves"]
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -174,7 +182,7 @@ def read_state(directory: str, template: PyTree,
         ent = entries[key]
         with open(os.path.join(directory, ent["file"]), "rb") as f:
             blob = f.read()
-        arr = lossy.decompress_blob(blob)
+        arr = lossy.decompress_blob(blob, pool)
         arr = jnp.asarray(arr)
         if ent.get("bf16") and not ent["lossy"]:
             arr = arr.view(jnp.bfloat16)

@@ -2,11 +2,12 @@
 from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
                                run_workflow)
 from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
-                                Stage, TaskResult, run_pipeline)
-from repro.core.staging import StagedItem, StagingBuffer
+                                Stage, TaskResult, run_pipeline,
+                                split_payload)
+from repro.core.staging import PendingHandoff, StagedItem, StagingBuffer
 from repro.core.telemetry import Telemetry
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
            "PipelineRuntime", "PipelineTask", "Placement", "Stage",
-           "TaskResult", "run_pipeline",
-           "StagedItem", "StagingBuffer", "Telemetry"]
+           "TaskResult", "run_pipeline", "split_payload",
+           "PendingHandoff", "StagedItem", "StagingBuffer", "Telemetry"]

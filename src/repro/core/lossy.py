@@ -55,13 +55,17 @@ def error_bound(eps: float) -> float:
 # single tensor: device lossy stage -> host lossless stage -> framed bytes
 # ---------------------------------------------------------------------------
 
-def frame_compressed(c: ref.Compressed, lossless: str = "zlib"
-                     ) -> tuple[bytes, LossyStats]:
-    """Host lossless stage: pack a device-produced Compressed into bytes."""
+def frame_compressed(c: ref.Compressed, lossless: str = "zlib",
+                     pool=None) -> tuple[bytes, LossyStats]:
+    """Host lossless stage: pack a device-produced Compressed into bytes.
+
+    ``pool`` fans the lossless chunks of a large coefficient buffer out
+    across the shared codec executor (see ``codecs.codec_pool``).
+    """
     q = np.asarray(c.q)
     scale = np.asarray(c.scale)
-    q_blob, _ = codecs.encode(q, lossless)
-    s_blob, _ = codecs.encode(scale, lossless)
+    q_blob, _ = codecs.encode(q, lossless, pool=pool)
+    s_blob, _ = codecs.encode(scale, lossless, pool=pool)
     shape = tuple(int(d) for d in c.shape)
     dt = jnp.dtype(c.dtype).name.encode()   # name token: handles bf16
     header = LOSSY_MAGIC + struct.pack("<B", len(dt)) + dt + struct.pack(
@@ -75,17 +79,17 @@ def frame_compressed(c: ref.Compressed, lossless: str = "zlib"
 
 def compress_tensor(x: jax.Array | np.ndarray, eps: float = 1e-2,
                     lossless: str = "zlib",
-                    measure: bool = False) -> tuple[bytes, LossyStats]:
+                    measure: bool = False, pool=None) -> tuple[bytes, LossyStats]:
     x = jnp.asarray(x)
-    c = ops.spectral_compress(x, eps)          # device lossy stage
-    blob, st = frame_compressed(c, lossless)   # host lossless stage
+    c = ops.spectral_compress(x, eps)                # device lossy stage
+    blob, st = frame_compressed(c, lossless, pool)   # host lossless stage
     if measure:
         st = LossyStats(st.raw_bytes, st.stored_bytes, st.kept_fraction,
                         ref.rel_l2_error(x, ops.spectral_decompress(c)))
     return blob, st
 
 
-def decompress_tensor(blob: bytes) -> jax.Array:
+def decompress_tensor(blob: bytes, pool=None) -> jax.Array:
     if blob[:4] != LOSSY_MAGIC:
         raise ValueError("bad lossy frame magic")
     off = 4
@@ -104,8 +108,9 @@ def decompress_tensor(blob: bytes) -> jax.Array:
     off += 8 * ndim
     qlen, slen = struct.unpack_from("<qq", blob, off)
     off += 16
-    q = jnp.asarray(codecs.decode(blob[off:off + qlen]))
-    scale = jnp.asarray(codecs.decode(blob[off + qlen:off + qlen + slen]))
+    q = jnp.asarray(codecs.decode(blob[off:off + qlen], pool=pool))
+    scale = jnp.asarray(codecs.decode(blob[off + qlen:off + qlen + slen],
+                                      pool=pool))
     c = ref.Compressed(q, scale, n_elements, tuple(shape), jnp.dtype(dtype))
     return ops.spectral_decompress(c)
 
@@ -139,10 +144,10 @@ def compress_tree(tree: PyTree, eps: float = 1e-2, lossless: str = "zlib",
     return blobs, stats
 
 
-def decompress_blob(blob: bytes) -> np.ndarray | jax.Array:
+def decompress_blob(blob: bytes, pool=None) -> np.ndarray | jax.Array:
     if blob[:4] == LOSSY_MAGIC:
-        return decompress_tensor(blob)
-    return codecs.decode(blob)
+        return decompress_tensor(blob, pool)
+    return codecs.decode(blob, pool=pool)
 
 
 class SpectralLossyCodec:

@@ -14,13 +14,33 @@ that one scheduler, not separate code paths:
            internally-parallel firing (``shards > 1``) fans its shards out
            on the shared pool and the loop waits on a latch — no transient
            executors are ever constructed.
-  ASYNC  : the loop blocks only for DeviceStage + Handoff; host stages and
-           the sink run on the pool, fed through the bounded staging ring
-           (Fig. 1b, the ADIOS2-send analog).
+  ASYNC  : the loop blocks only for DeviceStage + hand-off *dispatch*; the
+           transfer drains, and host stages plus the sink run, on the pool,
+           fed through the bounded staging ring (Fig. 1b, the ADIOS2-send
+           analog).
   HYBRID : ASYNC scheduling for a task that declares a DeviceStage — the
            deeply-coupled device kernel (Pallas spectral lossy) shrinks the
            payload before the hand-off, so the D2H transfer ships the small
            residue (Fig. 1c, the NEKO pattern).
+
+The hand-off is two-phase ("blocks only for the send", Fig. 1b):
+
+  dispatch     (loop thread, ``handoff/dispatch``): snapshot jax leaves
+               with a device-side copy (donation-proofing — see
+               ``PipelineTask.snapshot``), start the D2H copy per leaf via
+               ``copy_to_host_async``, and enqueue a ``PendingHandoff``
+               token. This is the only hand-off cost the loop pays for a
+               pipelined ASYNC/HYBRID task.
+  materialize  (consumer thread, ``handoff/materialize``): the task's
+               ``handoff`` function turns the token's payload into host
+               numpy — overlapped with the next device steps; the bounded
+               staging ring double-buffers in-flight transfers.
+
+SYNC tasks (and tasks with ``pipelined=False``, the pre-pipelined blocking
+behaviour) run both phases inline under the legacy ``step/handoff`` span, so
+the loop-blocking hand-off cost keeps its historical name. Sharded firings
+also materialize on the loop (a token cannot be split); that stall is
+likewise recorded as ``step/handoff``.
 
 Backpressure on a full ring is a per-task policy:
 
@@ -34,8 +54,10 @@ Backpressure on a full ring is a per-task policy:
           less often when the in-situ side outgrows its resources.
 
 Telemetry: every firing records per-placement spans under the same names
-the pre-runtime engine used (``step/handoff``, ``insitu-sync/<task>``,
-``insitu-async/<task>``, ``insitu-device/<task>``, ``staging/wait``), so
+the pre-runtime engine used (``step/compute``, ``insitu-sync/<task>``,
+``insitu-async/<task>``, ``insitu-device/<task>``, ``staging/wait``) plus
+the hand-off split (``handoff/dispatch``, ``handoff/materialize``,
+``step/handoff`` for loop-blocking transfers), so
 ``Telemetry.step_overlap_report`` and every benchmark figure read
 identically; host stages additionally get ``stage/<task>/<stage>`` spans
 for per-stage attribution.
@@ -51,7 +73,8 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.core.staging import Closed, StagedItem, StagingBuffer
+from repro.core.staging import (Closed, PendingHandoff, StagedItem,
+                                StagingBuffer)
 from repro.core.telemetry import Telemetry
 
 PyTree = Any
@@ -72,19 +95,78 @@ class Stage:
     fn: Callable[[int, Any], Any]
 
 
+def _to_host(x: Any) -> Any:
+    return np.asarray(x) if hasattr(x, "dtype") else x
+
+
+def _start_d2h(payload: Any, snapshot: bool = False) -> Any:
+    """Dispatch phase: start the device->host copy of every array leaf.
+
+    ``copy_to_host_async`` returns immediately (the DMA engine moves the
+    bytes while the loop keeps stepping); leaves without it (numpy, scalars)
+    are already host-resident.
+
+    ``snapshot`` detaches jax leaves from the caller's buffers with a
+    device-side copy first. Required whenever materialization is deferred
+    past the next step and the app's jitted step *donates* its inputs
+    (``jit_train_step`` defaults ``donate=True``): donation deletes the
+    original buffers at the next dispatch, and a pending token holding them
+    would materialize into "Array has been deleted". The copy is enqueued
+    like any other device op (async on accelerators), so the dispatch stays
+    off the critical path.
+    """
+    def start(x: Any) -> Any:
+        if hasattr(x, "copy_to_host_async"):
+            if snapshot and hasattr(x, "is_deleted"):
+                x = jax.numpy.copy(x)      # token-owned, donation-proof
+            x.copy_to_host_async()
+        return x
+
+    return jax.tree.map(start, payload)
+
+
 def default_handoff(payload: Any) -> Any:
-    """Device->host transfer: materialize every array leaf as numpy."""
-    return jax.tree.map(
-        lambda x: np.asarray(x) if hasattr(x, "dtype") else x, payload)
+    """Materialize phase: every array leaf becomes host numpy."""
+    return jax.tree.map(_to_host, payload)
 
 
 def split_payload(payload: Any, shards: int) -> list:
-    """Shard a firing's payload on the leading axis (arrays only)."""
+    """Shard a firing's payload on the leading axis.
+
+    A bare ndarray splits directly; a pytree (dict/tuple/list) splits every
+    array leaf on its leading axis, producing ``shards`` trees of the same
+    structure. Payloads whose leaves cannot be sharded (scalars, 0-d arrays)
+    raise — silently running one shard would miscount the parallelism the
+    caller asked for.
+    """
     if shards <= 1:
         return [payload]
     if isinstance(payload, np.ndarray):
+        if payload.ndim < 1:
+            raise ValueError("cannot shard a 0-d array payload")
+        if payload.shape[0] < shards:
+            raise ValueError(
+                f"cannot shard leading axis of {payload.shape[0]} into "
+                f"{shards} non-empty pieces")
         return np.array_split(payload, shards)
-    return [payload]  # non-array payloads: no split
+    leaves, treedef = jax.tree_util.tree_flatten(payload)
+    if not leaves:
+        raise ValueError(
+            f"cannot shard an empty payload of type {type(payload).__name__}")
+    split_leaves = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.ndim < 1:
+            raise ValueError(
+                f"cannot shard payload: leaf of type {type(leaf).__name__} "
+                "has no leading axis")
+        if arr.shape[0] < shards:
+            raise ValueError(
+                f"cannot shard leaf with leading axis {arr.shape[0]} into "
+                f"{shards} non-empty pieces")
+        split_leaves.append(np.array_split(arr, shards))
+    return [jax.tree_util.tree_unflatten(treedef, [sl[i] for sl in split_leaves])
+            for i in range(shards)]
 
 
 @dataclass
@@ -99,9 +181,20 @@ class PipelineTask:
                       thread as the sink, per the placement).
     ``device_stage``  optional ``fn(step, payload) -> payload`` run *before*
                       the hand-off (the hybrid device kernel).
-    ``handoff``       device->host transfer; override when the transfer
-                      needs task-specific framing (e.g. checkpoint
-                      serialization's bf16 bookkeeping).
+    ``handoff``       the hand-off's *materialize* phase; override when the
+                      transfer needs task-specific framing (e.g. checkpoint
+                      serialization's bf16 bookkeeping). For a pipelined
+                      ASYNC/HYBRID task it runs on the consumer thread.
+    ``pipelined``     two-phase hand-off (default): the loop only dispatches
+                      the D2H copies; materialization overlaps on the pool.
+                      ``False`` restores the blocking hand-off (the loop
+                      materializes inline — the pre-pipelined behaviour,
+                      kept for benchmark baselines and host-driven sources).
+    ``snapshot``      device-side copy of jax leaves at dispatch (default):
+                      makes the deferred token immune to buffer *donation*
+                      by the app's next jitted step. Disable only when the
+                      producer guarantees buffer lifetime (no donation) and
+                      wants to skip the copy.
     ``shards``        split each firing into N independent sub-items
                       (models the paper's internally-parallel in-situ tasks).
     ``backpressure``  ring-full policy: 'block' | 'drop' | 'adapt'.
@@ -112,6 +205,8 @@ class PipelineTask:
     host_stages: Sequence[Stage] = ()
     device_stage: Optional[Callable[[int, Any], Any]] = None
     handoff: Callable[[Any], Any] = default_handoff
+    pipelined: bool = True
+    snapshot: bool = True
     placement: Placement = Placement.ASYNC
     every: int = 1
     shards: int = 1
@@ -233,6 +328,15 @@ class PipelineRuntime:
             else:
                 self._run_async_item(task, item)
 
+    def _resolve_payload(self, task: PipelineTask, item: StagedItem) -> Any:
+        """Consumer-side phase 2: drain a pending transfer, if any."""
+        payload = item.payload
+        if isinstance(payload, PendingHandoff):
+            with self.telemetry.span("handoff/materialize", step=item.step,
+                                     task=task.name):
+                payload = payload.materialize()
+        return payload
+
     def _run_chain(self, task: PipelineTask, step: int, payload: Any) -> Any:
         for stage in task.host_stages:
             with self.telemetry.span(f"stage/{task.name}/{stage.name}",
@@ -243,9 +347,10 @@ class PipelineRuntime:
     def _run_async_item(self, task: PipelineTask, item: StagedItem) -> None:
         t0 = time.perf_counter()
         try:
+            payload = self._resolve_payload(task, item)
             with self.telemetry.span(f"insitu-async/{task.name}",
                                      step=item.step):
-                res = self._run_chain(task, item.step, item.payload)
+                res = self._run_chain(task, item.step, payload)
             with self._cv:
                 self.results.append(TaskResult(
                     task.name, item.step, res,
@@ -261,7 +366,8 @@ class PipelineRuntime:
 
     def _run_sync_shard(self, task: PipelineTask, item: StagedItem) -> None:
         try:
-            res = self._run_chain(task, item.step, item.payload)
+            payload = self._resolve_payload(task, item)
+            res = self._run_chain(task, item.step, payload)
         except BaseException as e:  # noqa: BLE001 - latch must always fire
             item.group.complete(item.shard, None, e)
         else:
@@ -281,16 +387,36 @@ class PipelineRuntime:
 
     def _fire(self, step: int, task: PipelineTask,
               provider: Callable[[], Any]) -> None:
+        pipelined = (task.pipelined and task.placement is not Placement.SYNC
+                     and task.shards == 1)
+        if (pipelined and task.backpressure == "drop"
+                and len(self.staging) >= self.staging.capacity):
+            # pre-flight shed: a drop task must never cost the loop, so
+            # don't pay the provider, device stage, snapshot copy, or D2H
+            # dispatch for a firing the full ring would discard anyway
+            # (best-effort check — a race just falls through to try_put's
+            # authoritative one).
+            with self._lock:
+                self.drops[task.name] += 1
+            self.telemetry.count(f"staging/drop/{task.name}")
+            return
+        payload = provider()
         if task.device_stage is not None:
             with self.telemetry.span(f"insitu-device/{task.name}", step=step):
-                payload = task.device_stage(step, provider())
-            with self.telemetry.span("step/handoff", step=step,
+                payload = task.device_stage(step, payload)
+        if pipelined:
+            # two-phase: the loop pays only the copy dispatch; the consumer
+            # materializes (handoff/materialize) off the critical path.
+            with self.telemetry.span("handoff/dispatch", step=step,
                                      task=task.name):
-                payload = task.handoff(payload)
-        else:
-            with self.telemetry.span("step/handoff", step=step,
-                                     task=task.name):
-                payload = task.handoff(provider())
+                pending = PendingHandoff(
+                    _start_d2h(payload, snapshot=task.snapshot), task.handoff)
+            self._enqueue(step, task, [pending])
+            return
+        # blocking hand-off: SYNC placement, non-pipelined tasks, and sharded
+        # firings (a pending token cannot be split) materialize on the loop.
+        with self.telemetry.span("step/handoff", step=step, task=task.name):
+            payload = task.handoff(_start_d2h(payload))
         pieces = split_payload(payload, task.shards)
         if task.placement is Placement.SYNC:
             self._run_sync(step, task, pieces)

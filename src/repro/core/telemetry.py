@@ -8,12 +8,19 @@ training loop, the staging buffer, and the in-situ workers all write into; the
 benchmarks then aggregate the spans exactly the way the paper's figures do
 (total time, app time, in-situ time, hand-off time).
 
-Spans are (name, t0, t1, thread, step, meta). Aggregation is by name prefix:
-  step/compute        device step (dispatch->blocked-on-result)
-  step/handoff        device->host transfer the app blocks on (ADIOS2 send)
-  insitu/<task>/sync  inline (blocking) task execution
-  insitu/<task>/async worker-side task execution (overlapped)
-  staging/wait        producer blocked on a full ring (backpressure)
+Spans are (name, t0, t1, thread, step, meta). Recording is contention-free:
+each thread appends to its own buffer (registered once, lock-free afterwards)
+and readers merge the buffers — a worker's ``span()`` in the hot loop never
+serializes on a global lock against the training thread.
+
+Aggregation is by name prefix:
+  step/compute          device step (dispatch->blocked-on-result)
+  handoff/dispatch      D2H copy dispatch the loop blocks on (the "send")
+  handoff/materialize   transfer drain on the consumer side (overlapped)
+  step/handoff          loop-blocking materialization (SYNC / non-pipelined)
+  insitu-sync/<task>    inline (blocking) task execution
+  insitu-async/<task>   worker-side task execution (overlapped)
+  staging/wait          producer blocked on a full ring (backpressure)
 """
 from __future__ import annotations
 
@@ -40,14 +47,30 @@ class Span:
 
 
 class Telemetry:
-    """Thread-safe span log. One instance per run (engine/loop share it)."""
+    """Thread-safe span log. One instance per run (engine/loop share it).
+
+    Writers are lock-free: the first record from a thread registers a
+    per-thread buffer (one lock acquisition); every later append is a plain
+    ``list.append`` — atomic under the GIL, invisible to other threads'
+    hot paths. Readers snapshot and merge all buffers.
+    """
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._spans: list[Span] = []
+        self._lock = threading.Lock()       # buffer registry + counters only
+        self._buffers: list[list[Span]] = []
+        self._tls = threading.local()
         self._counters: dict[str, float] = defaultdict(float)
 
     # -- recording -----------------------------------------------------------
+
+    def _buf(self) -> list:
+        buf = getattr(self._tls, "buf", None)
+        if buf is None:
+            buf = []
+            self._tls.buf = buf
+            with self._lock:
+                self._buffers.append(buf)
+        return buf
 
     @contextlib.contextmanager
     def span(self, name: str, step: int = -1, **meta: Any) -> Iterator[None]:
@@ -56,17 +79,15 @@ class Telemetry:
             yield
         finally:
             t1 = time.perf_counter()
-            with self._lock:
-                self._spans.append(
-                    Span(name, t0, t1, threading.current_thread().name, step,
-                         dict(meta)))
+            self._buf().append(
+                Span(name, t0, t1, threading.current_thread().name, step,
+                     dict(meta)))
 
     def record(self, name: str, t0: float, t1: float, step: int = -1,
                **meta: Any) -> None:
-        with self._lock:
-            self._spans.append(
-                Span(name, t0, t1, threading.current_thread().name, step,
-                     dict(meta)))
+        self._buf().append(
+            Span(name, t0, t1, threading.current_thread().name, step,
+                 dict(meta)))
 
     def count(self, name: str, value: float = 1.0) -> None:
         with self._lock:
@@ -74,12 +95,24 @@ class Telemetry:
 
     # -- aggregation ---------------------------------------------------------
 
-    def spans(self, prefix: str = "") -> list[Span]:
+    def _merged(self) -> list[Span]:
+        """All spans, unordered (aggregations that need t0 order sort the
+        — usually much smaller — filtered subset themselves)."""
         with self._lock:
-            return [s for s in self._spans if s.name.startswith(prefix)]
+            buffers = list(self._buffers)
+        out: list[Span] = []
+        for buf in buffers:
+            out.extend(buf)
+        return out
+
+    def spans(self, prefix: str = "") -> list[Span]:
+        return sorted((s for s in self._merged()
+                       if s.name.startswith(prefix)),
+                      key=lambda s: s.t0)
 
     def total(self, prefix: str) -> float:
-        return sum(s.dt for s in self.spans(prefix))
+        return sum(s.dt for s in self._merged()
+                   if s.name.startswith(prefix))
 
     def counters(self) -> dict[str, float]:
         with self._lock:
@@ -94,7 +127,7 @@ class Telemetry:
 
     def busy(self, prefix: str = "") -> float:
         """Union of span intervals (true busy time across threads)."""
-        ss = sorted(self.spans(prefix), key=lambda s: s.t0)
+        ss = self.spans(prefix)          # merged spans arrive t0-sorted
         if not ss:
             return 0.0
         total = 0.0
@@ -109,10 +142,9 @@ class Telemetry:
 
     def summary(self) -> dict[str, dict[str, float]]:
         out: dict[str, dict[str, float]] = {}
-        with self._lock:
-            by_name: dict[str, list[Span]] = defaultdict(list)
-            for s in self._spans:
-                by_name[s.name].append(s)
+        by_name: dict[str, list[Span]] = defaultdict(list)
+        for s in self._merged():
+            by_name[s.name].append(s)
         for name, ss in sorted(by_name.items()):
             dts = [s.dt for s in ss]
             out[name] = {
@@ -126,21 +158,34 @@ class Telemetry:
     def step_overlap_report(self) -> dict[str, float]:
         """The paper's NSight question: did the device stall for in-situ work?
 
-        Returns total app-step time, sync in-situ (stall) time, async in-situ
-        (overlapped) time, and hand-off time. For an ideal async run the stall
-        term is ~0 and only the hand-off remains on the critical path.
+        ``handoff_s`` is the *critical-path* hand-off: copy dispatch plus any
+        loop-blocking materialization (SYNC / non-pipelined / sharded). The
+        overlapped drain is reported separately as ``handoff_materialize_s``.
+        For an ideal pipelined async run the stall term is ~0 and only the
+        dispatch remains on the critical path.
         """
-        return {
-            "step_compute_s": self.total("step/compute"),
-            "handoff_s": self.total("step/handoff"),
-            "sync_stall_s": self.total("insitu-sync/"),
-            "async_overlapped_s": self.total("insitu-async/"),
-            "staging_backpressure_s": self.total("staging/wait"),
+        prefixes = {
+            "step_compute_s": "step/compute",
+            "handoff_dispatch_s": "handoff/dispatch",
+            "handoff_materialize_s": "handoff/materialize",
+            "_blocking": "step/handoff",
+            "sync_stall_s": "insitu-sync/",
+            "async_overlapped_s": "insitu-async/",
+            "staging_backpressure_s": "staging/wait",
         }
+        totals = dict.fromkeys(prefixes, 0.0)
+        for s in self._merged():          # one merge for all seven prefixes
+            for key, prefix in prefixes.items():
+                if s.name.startswith(prefix):
+                    totals[key] += s.dt
+        totals["handoff_s"] = totals["handoff_dispatch_s"] \
+            + totals.pop("_blocking")
+        return totals
 
     def reset(self) -> None:
         with self._lock:
-            self._spans.clear()
+            for buf in self._buffers:
+                buf.clear()
             self._counters.clear()
 
 

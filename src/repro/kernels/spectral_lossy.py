@@ -107,12 +107,70 @@ def dct_hist(xb: jax.Array, *, interpret: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# kernel 1b: DCT + per-tile histogram (fused-tree variant)
+# ---------------------------------------------------------------------------
+#
+# Same DCT matmul and one-hot binning as kernel 1, but instead of
+# accumulating one global histogram across the grid, each grid step writes
+# its own (count, energy) row. The caller segment-sums tile rows back to
+# per-leaf histograms — which is how ONE kernel invocation over a packed
+# multi-leaf buffer still yields per-leaf thresholds (leaves are padded to
+# HIST_TILE multiples before packing, so no tile straddles two leaves).
+
+def _dct_hist_tiled_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
+    x = x_ref[...].astype(jnp.float32)          # (TILE, BLOCK)
+    d = d_ref[...]                              # (BLOCK, BLOCK)
+    y = jax.lax.dot_general(                    # y = x @ d.T   (MXU)
+        x, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[...] = y
+
+    a = jnp.abs(y.reshape(-1))                  # (TILE*BLOCK,)
+    a2 = a * a
+    lg = jnp.where(a > 0, jnp.log2(jnp.maximum(a, 1e-38)), LOG2_LO)
+    idx = jnp.clip(((lg - LOG2_LO) * (NBINS / (LOG2_HI - LOG2_LO)))
+                   .astype(jnp.int32), 0, NBINS - 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], NBINS), 1)
+    onehot = (idx[:, None] == bins).astype(jnp.float32)
+    cnt_ref[...] = jnp.sum(onehot, axis=0)[None]
+    eng_ref[...] = jax.lax.dot_general(
+        a2, onehot, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]
+
+
+def dct_hist_tiled(xb: jax.Array, *, interpret: bool = True):
+    """xb: (n_blocks, BLOCK) f32 -> (y, counts (n_tiles, NBINS), energies)."""
+    n_blocks = xb.shape[0]
+    assert n_blocks % HIST_TILE == 0 and xb.shape[1] == BLOCK
+    d = jnp.asarray(dct_matrix(BLOCK))
+    n_tiles = n_blocks // HIST_TILE
+    return pl.pallas_call(
+        _dct_hist_tiled_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, NBINS), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, NBINS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, d)
+
+
+# ---------------------------------------------------------------------------
 # kernel 2: threshold + int8 quantize
 # ---------------------------------------------------------------------------
 
 def _threshold_quant_kernel(y_ref, t_ref, q_ref, s_ref):
     y = y_ref[...]                               # (TILE, BLOCK) f32
-    t = t_ref[0]
+    t = t_ref[...][:, None]                      # (TILE, 1) per-block threshold
     kept = jnp.where(jnp.abs(y) >= t, y, 0.0)
     amax = jnp.max(jnp.abs(kept), axis=-1)       # (TILE,)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
@@ -122,15 +180,20 @@ def _threshold_quant_kernel(y_ref, t_ref, q_ref, s_ref):
 
 
 def threshold_quant(y: jax.Array, t: jax.Array, *, interpret: bool = True):
+    """``t`` is a scalar threshold or a per-block (n_blocks,) vector — the
+    latter lets one invocation quantize a packed multi-leaf buffer where
+    every leaf carries its own eps-derived threshold."""
     n_blocks = y.shape[0]
     tile = _pick_tile(n_blocks, QUANT_TILE)
-    t = jnp.asarray(t, jnp.float32).reshape(1)
+    t = jnp.asarray(t, jnp.float32)
+    if t.ndim == 0 or t.size == 1:
+        t = jnp.broadcast_to(t.reshape(()), (n_blocks,))
     return pl.pallas_call(
         _threshold_quant_kernel,
         grid=(n_blocks // tile,),
         in_specs=[
             pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),

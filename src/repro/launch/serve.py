@@ -68,9 +68,12 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     total = time.perf_counter() - t0
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)
+    rep = tm.step_overlap_report()
     log(f"served {done}/{len(requests)} requests, {toks} tokens "
         f"in {total:.2f}s ({toks / max(total, 1e-9):.1f} tok/s), "
-        f"insitu results={len(insitu.results)}")
+        f"insitu results={len(insitu.results)}, "
+        f"handoff dispatch={rep['handoff_dispatch_s'] * 1e3:.2f}ms "
+        f"(materialize {rep['handoff_materialize_s'] * 1e3:.2f}ms overlapped)")
     return {"requests": requests, "telemetry": tm, "steps": step,
             "insitu_results": len(insitu.results), "tok_per_s": toks / total}
 

@@ -58,3 +58,82 @@ def test_table2_ordering_on_float_data(rng):
 def test_compression_stats_eq1():
     s = codecs.CompressionStats("zlib", 100, 25)
     assert s.ratio == pytest.approx(0.75)   # paper Eq. (1)
+
+
+# -- chunked v2 framing -------------------------------------------------------
+
+def _encode_v1(arr, codec="zlib"):
+    """The pre-chunking frame layout, byte-for-byte (old checkpoints)."""
+    import struct
+    import zlib as _zlib
+    comp = {"zlib": lambda b: _zlib.compress(b, 6), "none": lambda b: b}[codec]
+    cid = {"zlib": 1, "none": 0}[codec]
+    arr = np.ascontiguousarray(arr)
+    raw = arr.tobytes()
+    dt = np.dtype(arr.dtype).str.encode()
+    return (codecs.MAGIC + struct.pack("<BBB", 1, cid, len(dt)) + dt
+            + struct.pack("<B", arr.ndim)
+            + struct.pack(f"<{arr.ndim}q", *arr.shape)
+            + struct.pack("<q", len(raw)) + comp(raw))
+
+
+@pytest.mark.parametrize("codec", ["zlib", "none"])
+def test_v1_frame_backward_compat_decode(codec, rng):
+    arr = rng.standard_normal((100, 7)).astype(np.float32)
+    out = codecs.decode(_encode_v1(arr, codec))
+    np.testing.assert_array_equal(out, arr)
+    assert out.dtype == arr.dtype
+
+
+@pytest.mark.parametrize("codec", ["zlib1", "bz2", "none"])
+def test_multichunk_roundtrip(codec, rng):
+    """A >1-chunk array: independent chunks reassemble exactly."""
+    arr = rng.standard_normal(300_000).astype(np.float32)   # 1.2 MB
+    blob, stats = codecs.encode(arr, codec, chunk_bytes=1 << 18)  # 5 chunks
+    assert stats.raw_bytes == arr.nbytes
+    out = codecs.decode(blob)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_chunk_pool_produces_identical_frames(rng):
+    arr = rng.standard_normal(200_000).astype(np.float32)
+    serial, _ = codecs.encode(arr, "zlib1", chunk_bytes=1 << 17)
+    parallel, _ = codecs.encode(arr, "zlib1", chunk_bytes=1 << 17,
+                                pool=codecs.codec_pool())
+    assert serial == parallel               # pool changes time, not bytes
+    out = codecs.decode(parallel, pool=codecs.codec_pool())
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_chunked_frame_zero_size_and_0d(rng):
+    empty = np.empty((0, 4), np.float32)
+    out = codecs.decode(codecs.encode(empty, "zlib")[0])
+    assert out.shape == (0, 4) and out.dtype == np.float32
+    scalar = np.asarray(3.5, np.float32)
+    out = codecs.decode(codecs.encode(scalar, "zlib")[0])
+    # ascontiguousarray promotes 0-d to (1,) — same contract as v1 frames
+    assert out.shape == (1,) and out[0] == np.float32(3.5)
+
+
+def test_truncated_chunk_table_rejected(rng):
+    """A chunk table that cannot cover raw_nbytes must raise, not decode a
+    silently zero-filled tail (the v1 'frame length mismatch' guarantee)."""
+    import struct
+    arr = rng.standard_normal(200_000).astype(np.float32)   # 800 KB
+    blob, _ = codecs.encode(arr, "zlib1", chunk_bytes=1 << 18)  # 4 chunks
+    # header: MAGIC(4) ver/cid/dtlen(3) dt(3) ndim(1) shape(8) -> offset 19
+    off = 4 + 3 + np.dtype(np.float32).str.encode().__len__() + 1 + 8
+    raw_nbytes, chunk_bytes, n_chunks = struct.unpack_from("<qqI", blob, off)
+    assert n_chunks == 4
+    bad = bytearray(blob)
+    struct.pack_into("<qqI", bad, off, raw_nbytes, chunk_bytes, 1)
+    with pytest.raises(ValueError, match="chunk table"):
+        codecs.decode(bytes(bad))
+
+
+def test_unsupported_version_rejected(rng):
+    arr = rng.standard_normal(16).astype(np.float32)
+    blob, _ = codecs.encode(arr, "zlib")
+    bad = blob[:4] + bytes([99]) + blob[5:]
+    with pytest.raises(ValueError, match="version"):
+        codecs.decode(bad)

@@ -112,6 +112,62 @@ def test_staging_try_put_drop_policy():
     assert not buf.try_put(StagedItem(1, "a", 1))
 
 
+def _timed_consumer(buf, out):
+    try:
+        item = buf.get()
+        out.append(("item", item.payload, time.perf_counter()))
+    except Closed:
+        out.append(("closed", None, time.perf_counter()))
+
+
+def test_staging_get_wakes_immediately_on_put():
+    """Condition-driven ring: no 0.1 s poll loop between put and wake-up."""
+    buf = StagingBuffer(capacity=2)
+    out = []
+    th = threading.Thread(target=_timed_consumer, args=(buf, out))
+    th.start()
+    time.sleep(0.05)                      # consumer is parked in get()
+    t_put = time.perf_counter()
+    buf.put(StagedItem(0, "a", 42))
+    th.join(timeout=5)
+    kind, payload, t_wake = out[0]
+    assert (kind, payload) == ("item", 42)
+    assert t_wake - t_put < 0.05, f"woke after {t_wake - t_put:.3f}s"
+
+
+def test_staging_close_wakes_blocked_consumer_immediately():
+    buf = StagingBuffer(capacity=2)
+    out = []
+    th = threading.Thread(target=_timed_consumer, args=(buf, out))
+    th.start()
+    time.sleep(0.05)
+    t_close = time.perf_counter()
+    buf.close()
+    th.join(timeout=5)
+    kind, _, t_wake = out[0]
+    assert kind == "closed"
+    assert t_wake - t_close < 0.05, f"woke after {t_wake - t_close:.3f}s"
+
+
+def test_staging_blocked_producer_raises_on_close():
+    buf = StagingBuffer(capacity=1)
+    buf.put(StagedItem(0, "a", 0))        # ring now full
+    errs = []
+
+    def producer():
+        try:
+            buf.put(StagedItem(1, "a", 1))
+        except Closed:
+            errs.append("closed")
+
+    th = threading.Thread(target=producer)
+    th.start()
+    time.sleep(0.05)
+    buf.close()
+    th.join(timeout=5)
+    assert errs == ["closed"]
+
+
 # -- allocator (Table I / F1 / F6) ---------------------------------------------
 
 def test_amdahl_fit():

@@ -64,6 +64,103 @@ def test_quant_dequant_kernels_match_oracle(nb):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_dct_hist_tiled_matches_accumulated_histogram():
+    """Per-tile rows sum to the accumulated histogram of kernel 1."""
+    x = _signal(40000)
+    xb, _ = ref.blockize(x)
+    pad = (-xb.shape[0]) % K.HIST_TILE
+    xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    y_t, cnt_t, eng_t = K.dct_hist_tiled(xb, interpret=True)
+    y_a, cnt_a, eng_a = K.dct_hist(xb, interpret=True)
+    assert cnt_t.shape == (xb.shape[0] // K.HIST_TILE, ref.NBINS)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_a))
+    np.testing.assert_allclose(np.asarray(cnt_t).sum(0), np.asarray(cnt_a))
+    np.testing.assert_allclose(np.asarray(eng_t).sum(0), np.asarray(eng_a),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_threshold_quant_per_block_vector_matches_scalar_slices():
+    """A vector of per-block thresholds ≡ scalar invocations per segment —
+    the contract the fused multi-leaf dispatch relies on."""
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.standard_normal((24, ref.BLOCK)).astype(np.float32))
+    t_vec = jnp.asarray(np.repeat([0.1, 0.5, 1.0], 8).astype(np.float32))
+    q_v, s_v = K.threshold_quant(y, t_vec, interpret=True)
+    for seg, t in enumerate([0.1, 0.5, 1.0]):
+        sl = slice(seg * 8, (seg + 1) * 8)
+        q_s, s_s = K.threshold_quant(y[sl], jnp.asarray(t), interpret=True)
+        np.testing.assert_array_equal(np.asarray(q_v[sl]), np.asarray(q_s))
+        np.testing.assert_array_equal(np.asarray(s_v[sl]), np.asarray(s_s))
+
+
+def test_fused_packed_kernel_path_matches_per_leaf_kernels():
+    """The TPU fused-tree recipe (packed dct_hist_tiled -> segment-summed
+    histograms -> per-block-threshold quant), executed in interpret mode,
+    reproduces the per-leaf kernel results bit-for-bit."""
+    rng = np.random.default_rng(3)
+    leaves = [jnp.asarray(rng.standard_normal(n).astype(np.float32))
+              for n in (2048, 6000, 512)]
+    eps = 1e-2
+    blocks = []
+    for x in leaves:
+        xb, _ = ref.blockize(x)
+        xb = jnp.pad(xb, ((0, (-xb.shape[0]) % K.HIST_TILE), (0, 0)))
+        blocks.append(xb)
+    counts = [b.shape[0] for b in blocks]
+    packed = jnp.concatenate(blocks, 0)
+    y, _, eng_t = K.dct_hist_tiled(packed, interpret=True)
+    tile_seg = np.repeat(np.arange(len(counts)),
+                         [c // K.HIST_TILE for c in counts])
+    seg_eng = jnp.zeros((len(counts), ref.NBINS), jnp.float32
+                        ).at[jnp.asarray(tile_seg)].add(eng_t)
+    t_seg = jax.vmap(
+        lambda e: ref.threshold_from_histogram(e, eps))(seg_eng)
+    block_seg = np.repeat(np.arange(len(counts)), counts)
+    q, s = K.threshold_quant(y, t_seg[jnp.asarray(block_seg)],
+                             interpret=True)
+    off = 0
+    for xb, c in zip(blocks, counts):
+        y_k, _, eng_k = K.dct_hist(xb, interpret=True)
+        t_k = ref.threshold_from_histogram(eng_k, eps)
+        q_k, s_k = K.threshold_quant(y_k, t_k, interpret=True)
+        np.testing.assert_array_equal(np.asarray(q[off:off + c]),
+                                      np.asarray(q_k))
+        np.testing.assert_array_equal(np.asarray(s[off:off + c]),
+                                      np.asarray(s_k))
+        off += c
+
+
+def test_fused_tree_bit_equal_to_per_leaf():
+    """Tentpole contract: the single-dispatch fused tree compression is
+    bit-identical to the per-leaf path, leaf by leaf."""
+    rng = np.random.default_rng(4)
+    state = {
+        "w": jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32)),
+        "opt": {"mu": jnp.asarray(rng.standard_normal(5000)
+                                  .astype(np.float32)),
+                "nu": jnp.asarray(rng.standard_normal((16, 100))
+                                  .astype(np.float32)),
+                "mu_b": jnp.asarray(rng.standard_normal(77)
+                                    .astype(np.float32))},
+    }
+    policy = lambda k: "mu" in k or "nu" in k   # noqa: E731
+    fused = ops.spectral_compress_tree(state, 1e-2, policy, fused=True)
+    plain = ops.spectral_compress_tree(state, 1e-2, policy, fused=False)
+    for key in ("mu", "nu", "mu_b"):
+        f, p = fused["opt"][key], plain["opt"][key]
+        np.testing.assert_array_equal(np.asarray(f.q), np.asarray(p.q))
+        np.testing.assert_array_equal(np.asarray(f.scale),
+                                      np.asarray(p.scale))
+        assert (f.n_elements, f.shape, f.dtype) == \
+            (p.n_elements, p.shape, p.dtype)
+    # non-selected leaves pass through untouched
+    assert fused["w"] is state["w"]
+    # roundtrip still honors the codec's error bound
+    back = ops.spectral_decompress(fused["opt"]["mu"])
+    assert ref.rel_l2_error(state["opt"]["mu"], back) \
+        <= ref.error_bound(1e-2) + 1e-5
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
 def test_codec_dtype_sweep(dtype):
     x = _signal(5000).astype(dtype)

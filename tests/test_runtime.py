@@ -3,6 +3,8 @@
 The tentpole contracts of the unified runtime:
   * one scheduler — SYNC / ASYNC / HYBRID are policies, sharded SYNC work
     rides the shared pool (no transient executors)
+  * two-phase hand-off — the loop pays only ``handoff/dispatch``; pending
+    transfers materialize FIFO on the consumers and fully drain
   * backpressure policies: block (staging/wait), drop (counted), adapt
     (the effective firing period lengthens under sustained pressure)
   * declarative stage chains get per-stage telemetry spans
@@ -12,12 +14,14 @@ The tentpole contracts of the unified runtime:
 import threading
 import time
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import compression
 from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
-                                Stage, run_pipeline)
+                                Stage, run_pipeline, split_payload)
+from repro.core.telemetry import Telemetry
 
 
 def _loop(runtime, n, step_s=0.0, payload=None):
@@ -105,6 +109,162 @@ def test_device_stage_runs_before_handoff():
     rt.wait_idle()
     assert events == ["device", "handoff", "sink"]
     assert rt.telemetry.total("insitu-device/hy") > 0
+
+
+# -- two-phase (pipelined) hand-off -------------------------------------------
+
+def test_pipelined_handoff_dispatches_on_loop_materializes_on_worker():
+    """ASYNC: loop records only handoff/dispatch; the worker drains the
+    transfer (handoff/materialize) and results arrive FIFO, fully drained."""
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: float(p.sum()))],
+        workers=1)
+    payloads = {i: jnp.arange(8.0) + i for i in range(4)}
+    run_pipeline(4, lambda i: {"x": lambda: payloads[i]}, rt)
+    assert [r.step for r in rt.results] == [0, 1, 2, 3]   # FIFO, all drained
+    assert [r.result for r in rt.results] == [28.0, 36.0, 44.0, 52.0]
+    assert not rt.errors
+    dispatch = rt.telemetry.spans("handoff/dispatch")
+    materialize = rt.telemetry.spans("handoff/materialize")
+    assert len(dispatch) == 4 and len(materialize) == 4
+    assert all(s.thread == threading.main_thread().name for s in dispatch)
+    assert all(s.thread.startswith("insitu-") for s in materialize)
+    # nothing blocked the loop beyond the dispatch
+    assert rt.telemetry.spans("step/handoff") == []
+    rep = rt.report()
+    assert rep["handoff_s"] == pytest.approx(rep["handoff_dispatch_s"])
+
+
+def test_pipelined_hybrid_custom_handoff_runs_on_worker_after_device():
+    events = []
+
+    def handoff(p):
+        events.append(("handoff", threading.current_thread().name))
+        return p * 2
+
+    rt = PipelineRuntime(
+        [PipelineTask(
+            "hy", "x",
+            device_stage=lambda s, p: events.append(
+                ("device", threading.current_thread().name)) or p,
+            handoff=handoff,
+            sink=lambda s, p: float(p.sum()),
+            placement=Placement.HYBRID)],
+        workers=1)
+    run_pipeline(1, lambda i: {"x": lambda: np.ones(4)}, rt)
+    assert [e[0] for e in events] == ["device", "handoff"]
+    assert events[0][1] == threading.main_thread().name     # device on loop
+    assert events[1][1].startswith("insitu-")               # handoff on pool
+    assert rt.results[0].result == 8.0
+
+
+def test_non_pipelined_task_keeps_blocking_handoff():
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: p.sum(),
+                      pipelined=False)],
+        workers=1)
+    run_pipeline(3, lambda i: {"x": lambda: np.ones(4)}, rt)
+    blocking = rt.telemetry.spans("step/handoff")
+    assert len(blocking) == 3
+    assert all(s.thread == threading.main_thread().name for s in blocking)
+    assert rt.telemetry.spans("handoff/dispatch") == []
+
+
+def test_pipelined_handoff_survives_buffer_donation():
+    """The dispatch snapshot detaches tokens from donated buffers: a train
+    step that donates its input (jit_train_step's default) must not delete
+    the payload out from under a pending transfer."""
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def train_step(x):
+        return x + 1.0
+
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: float(p.sum()))],
+        workers=1, staging_capacity=4)
+    x = jnp.ones(8)
+    for i in range(4):
+        rt.submit(i, {"x": lambda: x})
+        x = train_step(x)            # donates the buffer the token holds
+    rt.drain()
+    assert not rt.errors, rt.errors[:1]
+    assert [r.result for r in rt.results] == [8.0, 16.0, 24.0, 32.0]
+
+
+def test_drain_semantics_pending_transfers_all_materialize():
+    """A slow consumer + drain: every dispatched transfer still lands."""
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x",
+                      sink=lambda s, p: time.sleep(0.01) or float(p[0]))],
+        workers=1, staging_capacity=2)
+    run_pipeline(6, lambda i: {"x": lambda: jnp.full((4,), float(i))}, rt)
+    assert sorted(r.result for r in rt.results) == [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+    assert rt.staging.gets == rt.staging.puts == 6
+
+
+# -- split_payload ------------------------------------------------------------
+
+def test_split_payload_shards_pytree_leaves_on_leading_axis():
+    tree = {"a": np.arange(10), "b": np.ones((10, 3))}
+    parts = split_payload(tree, 2)
+    assert len(parts) == 2
+    assert parts[0]["a"].shape == (5,) and parts[1]["b"].shape == (5, 3)
+    np.testing.assert_array_equal(
+        np.concatenate([p["a"] for p in parts]), tree["a"])
+
+
+def test_split_payload_rejects_unshardable_leaves():
+    with pytest.raises(ValueError, match="leading axis"):
+        split_payload({"a": 3.0}, 2)
+    with pytest.raises(ValueError, match="0-d"):
+        split_payload(np.asarray(1.0), 2)
+
+
+def test_split_payload_rejects_undersized_leading_axis():
+    """A leading axis shorter than the shard count would silently produce
+    empty shards (np.array_split pads with empties) — raise instead."""
+    with pytest.raises(ValueError, match="non-empty"):
+        split_payload(np.ones(2), 4)
+    with pytest.raises(ValueError, match="non-empty"):
+        split_payload({"a": np.ones((1, 8))}, 4)
+
+
+def test_sharded_async_pytree_firing_runs_each_shard():
+    rt = PipelineRuntime(
+        [PipelineTask("t", "x", sink=lambda s, p: float(p["a"].sum()),
+                      placement=Placement.ASYNC, shards=2)],
+        workers=2)
+    run_pipeline(1, lambda i: {"x": lambda: {"a": np.ones(10)}}, rt)
+    assert sorted(r.result for r in rt.results) == [5.0, 5.0]
+    # sharded firings materialize on the loop (a token cannot be split)
+    assert len(rt.telemetry.spans("step/handoff")) == 1
+
+
+# -- telemetry: per-thread span buffers ---------------------------------------
+
+def test_telemetry_concurrent_recording_is_complete_and_ordered():
+    tm = Telemetry()
+    n_threads, per_thread = 4, 300
+
+    def writer(k):
+        for i in range(per_thread):
+            tm.record(f"x/{k}", float(i), float(i) + 0.5)
+
+    threads = [threading.Thread(target=writer, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spans = tm.spans("x/")
+    assert len(spans) == n_threads * per_thread
+    assert [s.t0 for s in spans] == sorted(s.t0 for s in spans)
+    assert tm.total("x/") == pytest.approx(0.5 * n_threads * per_thread)
+    tm.reset()
+    assert tm.spans() == []
 
 
 # -- backpressure policies ----------------------------------------------------
