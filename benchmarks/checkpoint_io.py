@@ -1,0 +1,177 @@
+"""Checkpoint I/O: v2 packed-shard layout vs the v1 file-per-leaf layout.
+
+The paper's core argument is that checkpointing dominates full-workflow
+time because IO bandwidth and storage lag compute. The v1 layout spent that
+budget on *metadata*: one open/write/fsync per leaf, and a serial leaf walk
+inside one encode worker. The v2 layout packs every framed blob into a few
+large ``shard_NNN.bin`` files bound by the manifest's offset table
+(openPMD/ADIOS2-style aggregation) and fans the encode out per leaf across
+the runtime pool; restore readaheads each shard once and fans per-leaf
+decode out on the codec pool.
+
+This benchmark measures, on a many-small-leaf tree (the MoE-expert /
+per-layer-moment shape):
+
+  * save and restore throughput (MB/s of raw tensor bytes) for both layouts
+  * the number of ``open`` calls each issues — v2's must be independent of
+    leaf count (asserted: opens for a 64-leaf tree == opens for a 16-leaf
+    tree, and far below the leaf count)
+
+Emits CSV rows like every benchmark; the metrics dict lands in
+``BENCH_runtime.json`` under ``checkpoint_io`` on ``--full`` runs of
+``benchmarks.run``. CI smoke-runs this module in quick mode.
+"""
+from __future__ import annotations
+
+import builtins
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import InSituMode
+
+
+class OpenCounter:
+    """Counts ``builtins.open`` calls (the per-leaf syscall pressure)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def __enter__(self) -> "OpenCounter":
+        self._orig = builtins.open
+
+        def counting(*args, **kwargs):
+            self.count += 1
+            return self._orig(*args, **kwargs)
+
+        builtins.open = counting
+        return self
+
+    def __exit__(self, *exc) -> None:
+        builtins.open = self._orig
+
+
+def _tree(n_leaves: int, elems: int) -> dict[str, np.ndarray]:
+    """Many-small-leaf state: n_leaves float32 leaves of elems elements."""
+    return {f"layer_{i:03d}": common.turbulence_field(elems, seed=i)
+            for i in range(n_leaves)}
+
+
+def _measure(tree: dict, directory: str, *, fmt: int, leaf_parallel: bool,
+             repeats: int) -> dict:
+    """Save/restore the tree through a manager; best-of-``repeats`` timings.
+
+    The v1 baseline also runs with ``chunk_parallel=False``: on sub-1MiB
+    leaves the chunk pool never engages, so that config matches the
+    pre-shard-layout scheduling (serial leaf walk, per-leaf files, serial
+    decode) without keeping dead code around. One deliberate difference:
+    per-leaf files are now fsynced (the durability bugfix applies to the v1
+    layout too — the pre-fix v1 skipped fsync, which was faster but could
+    publish a manifest pointing at unwritten bytes), so the comparison is
+    durable-v1 vs durable-v2: the per-leaf fsync cost is intrinsic to a
+    file-per-leaf layout once writes are actually durable.
+
+    The codec is ``none``: this benchmark isolates the *IO layout* (opens,
+    fsyncs, readahead), so the measured MB/s is an IO number. Compression
+    throughput is tracked separately (tab2_codecs, handoff_overlap), and a
+    CPU-bound encode would only add scheduler noise to the layout signal.
+    """
+    mgr = CheckpointManager(CheckpointConfig(
+        directory, mode=InSituMode.SYNC, every=1, keep=1,
+        lossless="none", lossy_moments=False, format=fmt,
+        leaf_parallel=leaf_parallel, chunk_parallel=leaf_parallel))
+    raw_mb = sum(a.nbytes for a in tree.values()) / 1e6
+    save_s, save_opens = float("inf"), 0
+    for r in range(repeats):
+        with OpenCounter() as oc:
+            t0 = time.perf_counter()
+            mgr.save(r + 1, tree)
+            save_s = min(save_s, time.perf_counter() - t0)
+        save_opens = oc.count
+    restore_s = float("inf")
+    for _ in range(repeats):
+        with OpenCounter() as oc:
+            t0 = time.perf_counter()
+            step, restored = mgr.restore(tree)
+            restore_s = min(restore_s, time.perf_counter() - t0)
+        restore_opens = oc.count
+    mgr.finish()
+    for key, arr in tree.items():            # restores bit-identically
+        np.testing.assert_array_equal(np.asarray(restored[key]), arr)
+    return {"save_mb_s": raw_mb / save_s, "restore_mb_s": raw_mb / restore_s,
+            "save_s": save_s, "restore_s": restore_s,
+            "save_opens": save_opens, "restore_opens": restore_opens,
+            "raw_mb": raw_mb}
+
+
+def run(quick: bool = True) -> dict:
+    # full mode scales the *leaf count* (the benchmark is about many-small-
+    # leaf metadata pressure), never the leaf size: bigger leaves shift the
+    # comparison toward compute and away from what v2 changes
+    n_leaves, elems = (64 if quick else 256), 1 << 15       # 128 KiB per leaf
+    repeats = 2 if quick else 3
+    tree = _tree(n_leaves, elems)
+    layouts = {"v1": dict(fmt=1, leaf_parallel=False),
+               "v2": dict(fmt=2, leaf_parallel=True)}
+    res = {}
+    for name, kw in layouts.items():
+        with tempfile.TemporaryDirectory() as d:
+            res[name] = _measure(tree, d, repeats=repeats, **kw)
+
+    # leaf-count independence: the same v2 config over a 4x smaller tree
+    # must issue exactly as many opens (shards + manifest, never per leaf)
+    with tempfile.TemporaryDirectory() as d:
+        small = _measure(_tree(16, elems), d, repeats=1,
+                         **layouts["v2"])
+
+    for name, r in res.items():
+        common.row(f"ckpt_io/{name}/save", r["save_s"] * 1e6,
+                   f"measured;{r['save_mb_s']:.1f}MB/s;opens={r['save_opens']}")
+        common.row(f"ckpt_io/{name}/restore", r["restore_s"] * 1e6,
+                   f"measured;{r['restore_mb_s']:.1f}MB/s;"
+                   f"opens={r['restore_opens']}")
+
+    speedup = ((res["v1"]["save_s"] + res["v1"]["restore_s"])
+               / max(res["v2"]["save_s"] + res["v2"]["restore_s"], 1e-9))
+    common.row("ckpt_io/v2_over_v1_speedup", 0.0, f"{speedup:.2f}x")
+
+    # acceptance: packed shards decouple file opens from the tree's shape
+    assert res["v2"]["save_opens"] < n_leaves, (
+        f"v2 save opened {res['v2']['save_opens']} files for {n_leaves} "
+        "leaves — the shard layout must not scale opens with leaf count")
+    assert res["v2"]["save_opens"] == small["save_opens"], (
+        f"v2 save opens depend on leaf count: {res['v2']['save_opens']} "
+        f"({n_leaves} leaves) vs {small['save_opens']} (16 leaves)")
+    assert res["v2"]["restore_opens"] == small["restore_opens"], (
+        f"v2 restore opens depend on leaf count: {res['v2']['restore_opens']}"
+        f" ({n_leaves} leaves) vs {small['restore_opens']} (16 leaves)")
+    assert res["v1"]["save_opens"] >= n_leaves   # the baseline really is v1
+    # acceptance: aggregated+parallel save/restore beats the per-leaf walk
+    assert speedup >= 2.0, (
+        f"v2 save+restore only {speedup:.2f}x over v1 (want >= 2x)")
+
+    return {"n_leaves": n_leaves, "leaf_bytes": elems * 4,
+            "v1": res["v1"], "v2": res["v2"],
+            "save_restore_speedup": speedup, "quick": quick}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="write the metrics dict as JSON to this path")
+    args = ap.parse_args()
+    m = run(quick=not args.full)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(m, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {os.path.abspath(args.out)}")

@@ -1,6 +1,7 @@
 from repro.checkpoint.manager import (CheckpointConfig, CheckpointManager,
                                       default_lossy_policy)
 from repro.checkpoint import serialization
+from repro.checkpoint.serialization import CheckpointCorruptError
 
-__all__ = ["CheckpointConfig", "CheckpointManager", "default_lossy_policy",
-           "serialization"]
+__all__ = ["CheckpointConfig", "CheckpointCorruptError", "CheckpointManager",
+           "default_lossy_policy", "serialization"]

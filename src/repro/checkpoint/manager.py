@@ -14,10 +14,14 @@ declarative pipeline into a ``repro.core.runtime.PipelineRuntime``:
                  bookkeeping materialize on the consumer side, overlapped
                  with the next steps (JAX arrays are immutable, so the
                  deferred snapshot is exact)
-    HostStage    'encode': lossless framing of every leaf (core codecs,
-                 chunk-parallel on the shared codec pool)
-    Sink         'write': blobs -> manifest -> atomic directory rename,
-                 then lock-guarded retention
+    HostStage    'encode': lossless framing of every leaf — a FanoutStage
+                 whose per-leaf items are stolen by idle runtime workers
+                 (many-small-leaf trees encode leaf-parallel), each item
+                 additionally chunk-parallel on the shared codec pool
+    Sink         'write': packed shard files (v2 offset-table layout; one
+                 fsynced shard_NNN.bin instead of a file per leaf) ->
+                 manifest -> crash-safe directory publish, then
+                 lock-guarded retention
 
 SYNC / ASYNC / HYBRID are scheduling policies of the shared runtime
 (Fig. 1, paper Figs. 10-12), not manager code paths. A runtime can be
@@ -42,8 +46,8 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint import serialization as ser
-from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
-                                Stage)
+from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
+                                Placement, Stage)
 from repro.core.telemetry import Telemetry
 
 PyTree = Any
@@ -72,6 +76,27 @@ class CheckpointConfig:
     p_i: int = 2                      # workers for a manager-owned runtime
     staging_capacity: int = 2
     chunk_parallel: bool = True       # fan leaf chunks out on the codec pool
+    format: int = ser.CHECKPOINT_FORMAT  # 2: packed shards; 1: file per leaf
+    shard_count: int = 1              # v2: number of shard_NNN.bin files
+    leaf_parallel: bool = True        # fan encode out per leaf on the pool
+
+    def __post_init__(self) -> None:
+        if self.every < 1:
+            raise ValueError(
+                f"CheckpointConfig.every must be >= 1, got {self.every}: "
+                "maybe_save gates on step % every (every=0 divides by "
+                "zero); use save() directly for one-off checkpoints")
+        if self.keep < 0:
+            raise ValueError(
+                f"CheckpointConfig.keep must be >= 0, got {self.keep}")
+        if self.format not in (1, ser.CHECKPOINT_FORMAT):
+            raise ValueError(
+                f"CheckpointConfig.format must be 1 (per-leaf files) or "
+                f"{ser.CHECKPOINT_FORMAT} (packed shards), got {self.format}")
+        if self.shard_count < 1:
+            raise ValueError(
+                f"CheckpointConfig.shard_count must be >= 1, "
+                f"got {self.shard_count}")
 
 
 class CheckpointManager:
@@ -80,6 +105,9 @@ class CheckpointManager:
                  runtime: Optional[PipelineRuntime] = None) -> None:
         self.cfg = cfg
         os.makedirs(cfg.directory, exist_ok=True)
+        # crash recovery: drop unpublished tmp dirs from dead saves and
+        # re-publish a copy stranded mid-commit (see ser.sweep_stale)
+        ser.sweep_stale(cfg.directory)
         self.reports: list[ser.SaveReport] = []
         self._lock = threading.Lock()
         self._owns_runtime = runtime is None
@@ -98,6 +126,11 @@ class CheckpointManager:
         device_stage = (self._device_lossy
                         if cfg.mode is Placement.HYBRID and cfg.lossy_moments
                         else None)
+        encode = (FanoutStage("encode", split=self._encode_split,
+                              fn=self._encode_leaf_item,
+                              gather=self._encode_gather)
+                  if cfg.leaf_parallel
+                  else Stage("encode", self._encode_stage))
         self._task = self.runtime.register(PipelineTask(
             name="checkpoint",
             source="ckpt_state",
@@ -105,7 +138,7 @@ class CheckpointManager:
             every=1,                 # save()/maybe_save gate on cfg.every
             device_stage=device_stage,
             handoff=self._handoff,
-            host_stages=(Stage("encode", self._encode_stage),),
+            host_stages=(encode,),
             sink=self._write_sink,
         ))
 
@@ -138,17 +171,33 @@ class CheckpointManager:
         return codecs.codec_pool() if self.cfg.chunk_parallel else None
 
     def _encode_stage(self, step: int, payload: dict) -> dict:
-        """Host stage: lossless-encode every leaf (pure compute, no I/O).
-
-        Chunks of one large leaf compress in parallel on the shared codec
-        pool — the stdlib codecs release the GIL, so a single encode worker
-        saturates spare host cores without stealing runtime workers.
-        """
+        """Serial host stage (``leaf_parallel=False``): walk every leaf."""
         encoded = ser.encode_blobs(
             payload["state"], lossless=self.cfg.lossless,
             eps=self.cfg.lossy_eps, lossy_policy=self._lossy_policy(),
             bf16_keys=payload["bf16_keys"], pool=self._codec_pool())
         return {"encoded": encoded, "meta": payload["meta"]}
+
+    # leaf-parallel encode: one work item per leaf, stolen by idle runtime
+    # workers (FanoutStage), gathered before the sink so the commit protocol
+    # (blobs -> manifest -> rename) is unchanged. Chunks of a large leaf
+    # still fan out on the codec pool — the two pools are distinct, so leaf
+    # items never block on their own chunk jobs.
+
+    def _encode_split(self, step: int, payload: dict) -> list:
+        bf16_keys = payload["bf16_keys"]
+        return [(key, arr, bf16_keys) for key, arr in payload["state"].items()]
+
+    def _encode_leaf_item(self, step: int, item: tuple) -> tuple:
+        key, arr, bf16_keys = item
+        blob, ent = ser.encode_leaf(
+            key, arr, lossless=self.cfg.lossless, eps=self.cfg.lossy_eps,
+            lossy_policy=self._lossy_policy(), bf16_keys=bf16_keys,
+            pool=self._codec_pool())
+        return key, (blob, ent)
+
+    def _encode_gather(self, step: int, payload: dict, results: list) -> dict:
+        return {"encoded": dict(results), "meta": payload["meta"]}
 
     def _write_sink(self, step: int, payload: dict) -> ser.SaveReport:
         """Sink: atomic write (blobs -> manifest -> rename) + retention."""
@@ -156,7 +205,11 @@ class CheckpointManager:
         final = os.path.join(self.cfg.directory, f"step_{step:09d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
-        entries = ser.write_encoded(tmp, payload["encoded"])
+        if self.cfg.format >= ser.CHECKPOINT_FORMAT:
+            entries = ser.write_encoded_shards(tmp, payload["encoded"],
+                                               self.cfg.shard_count)
+        else:
+            entries = ser.write_encoded(tmp, payload["encoded"])
         ser.write_manifest(tmp, step, entries, payload["meta"])
         ser.commit(tmp, final)
         raw = sum(e["raw_bytes"] for e in entries.values())

@@ -1,13 +1,13 @@
 """The paper's contribution: in-situ task placement for accelerator loops."""
 from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
                                run_workflow)
-from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
-                                Stage, TaskResult, run_pipeline,
+from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
+                                Placement, Stage, TaskResult, run_pipeline,
                                 split_payload)
 from repro.core.staging import PendingHandoff, StagedItem, StagingBuffer
 from repro.core.telemetry import Telemetry
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
-           "PipelineRuntime", "PipelineTask", "Placement", "Stage",
-           "TaskResult", "run_pipeline", "split_payload",
+           "FanoutStage", "PipelineRuntime", "PipelineTask", "Placement",
+           "Stage", "TaskResult", "run_pipeline", "split_payload",
            "PendingHandoff", "StagedItem", "StagingBuffer", "Telemetry"]

@@ -60,13 +60,15 @@ the hand-off split (``handoff/dispatch``, ``handoff/materialize``,
 ``step/handoff`` for loop-blocking transfers), so
 ``Telemetry.step_overlap_report`` and every benchmark figure read
 identically; host stages additionally get ``stage/<task>/<stage>`` spans
-for per-stage attribution.
+for per-stage attribution, and a ``FanoutStage``'s stolen work items get
+``stage/<task>/<stage>/item`` spans on whichever worker ran them.
 """
 from __future__ import annotations
 
 import enum
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -93,6 +95,70 @@ class Stage:
     """One named host stage: ``fn(step, payload) -> payload``."""
     name: str
     fn: Callable[[int, Any], Any]
+
+
+@dataclass(frozen=True)
+class FanoutStage:
+    """A host stage whose work items fan out across the shared worker pool.
+
+    ``split(step, payload)`` breaks the firing into independent work items
+    (e.g. one per checkpoint leaf); ``fn(step, item)`` processes one item;
+    ``gather(step, payload, results)`` merges the per-item results (ordered
+    as split produced them) behind a barrier before the next stage / sink.
+
+    Scheduling is help-first work stealing: the thread running the chain
+    enqueues best-effort *steal tokens* on the staging ring and then drains
+    the item queue itself; idle pool workers that pop a token pull items
+    from the same queue concurrently. This is deadlock-free by construction
+    — no thread ever blocks on ring capacity for fan-out work, and the
+    barrier only waits on items another thread is actively executing — so it
+    is safe at any pool size (a lone worker simply runs the items serially).
+    """
+    name: str
+    split: Callable[[int, Any], Sequence]
+    fn: Callable[[int, Any], Any]
+    gather: Callable[[int, Any, list], Any]
+
+
+class _CompletionLatch:
+    """N-slot completion latch shared by sharded SYNC and fan-out firings."""
+
+    def __init__(self, n: int) -> None:
+        self.results: list = [None] * n
+        self.errors: list[BaseException] = []
+        self._remaining = n
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+
+    def complete(self, idx: int, result: Any,
+                 error: Optional[BaseException] = None) -> None:
+        with self._lock:
+            if error is not None:
+                self.errors.append(error)
+            else:
+                self.results[idx] = result
+            self._remaining -= 1
+            if self._remaining == 0:
+                self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+
+class _FanoutGroup(_CompletionLatch):
+    """Shared work queue + completion latch for one fanned-out stage firing."""
+
+    def __init__(self, step: int, task_name: str, stage: FanoutStage,
+                 items: Sequence) -> None:
+        super().__init__(len(items))
+        self.step = step
+        self.task_name = task_name
+        self.stage = stage
+        self._queue: deque = deque(enumerate(items))
+
+    def take(self) -> Optional[tuple[int, Any]]:
+        with self._lock:
+            return self._queue.popleft() if self._queue else None
 
 
 def _to_host(x: Any) -> Any:
@@ -232,29 +298,8 @@ class TaskResult:
     duration_s: float
 
 
-class _SyncGroup:
+class _SyncGroup(_CompletionLatch):
     """Completion latch for a sharded SYNC firing executed on the pool."""
-
-    def __init__(self, n: int) -> None:
-        self.results: list = [None] * n
-        self.errors: list[BaseException] = []
-        self._remaining = n
-        self._done = threading.Event()
-        self._lock = threading.Lock()
-
-    def complete(self, shard: int, result: Any,
-                 error: Optional[BaseException] = None) -> None:
-        with self._lock:
-            if error is not None:
-                self.errors.append(error)
-            else:
-                self.results[shard] = result
-            self._remaining -= 1
-            if self._remaining == 0:
-                self._done.set()
-
-    def wait(self, timeout: Optional[float] = None) -> bool:
-        return self._done.wait(timeout)
 
 
 class PipelineRuntime:
@@ -294,7 +339,8 @@ class PipelineRuntime:
         self._every[task.name] = int(task.every)
         self._pressure[task.name] = 0
         self.drops[task.name] = 0
-        if task.placement is not Placement.SYNC or task.shards > 1:
+        if (task.placement is not Placement.SYNC or task.shards > 1
+                or any(isinstance(s, FanoutStage) for s in task.host_stages)):
             self._ensure_pool()
         return task
 
@@ -322,6 +368,11 @@ class PipelineRuntime:
                 item = self.staging.get()
             except Closed:
                 return
+            if isinstance(item.group, _FanoutGroup):
+                # steal token: pull items off the group's queue until dry
+                # (a token popped after the group finished is a no-op)
+                self._drain_fanout(item.group)
+                continue
             task = self._tasks[item.name]
             if item.group is not None:
                 self._run_sync_shard(task, item)
@@ -341,8 +392,56 @@ class PipelineRuntime:
         for stage in task.host_stages:
             with self.telemetry.span(f"stage/{task.name}/{stage.name}",
                                      step=step):
-                payload = stage.fn(step, payload)
+                if isinstance(stage, FanoutStage):
+                    payload = self._run_fanout_stage(task, stage, step,
+                                                     payload)
+                else:
+                    payload = stage.fn(step, payload)
         return task.sink(step, payload)
+
+    def _drain_fanout(self, group: _FanoutGroup) -> None:
+        """Run fan-out items until the group's queue is empty."""
+        while (job := group.take()) is not None:
+            idx, item = job
+            try:
+                with self.telemetry.span(
+                        f"stage/{group.task_name}/{group.stage.name}/item",
+                        step=group.step):
+                    res = group.stage.fn(group.step, item)
+            except BaseException as e:  # noqa: BLE001 - latch must fire
+                group.complete(idx, None, e)
+            else:
+                group.complete(idx, res)
+
+    def _run_fanout_stage(self, task: PipelineTask, stage: FanoutStage,
+                          step: int, payload: Any) -> Any:
+        items = list(stage.split(step, payload))
+        if not items:
+            return stage.gather(step, payload, [])
+        group = _FanoutGroup(step, task.name, stage, items)
+        if self._threads and len(items) > 1:
+            # advertise steal tokens (best-effort: a full/closed ring just
+            # means the coordinator keeps more of the work). Tokens bypass
+            # the queued/finished accounting — they are hints, not items —
+            # and are capped below the ring's free capacity: a hint must
+            # never occupy the last free slot, or a busy pool would let
+            # lingering tokens distort other tasks' backpressure (shed
+            # 'drop' firings, stall 'block' producers, inflate 'adapt'
+            # pressure) on a shared runtime.
+            free = self.staging.capacity - len(self.staging)
+            n_tokens = min(len(items) - 1, self.workers, free - 1)
+            try:
+                for _ in range(n_tokens):
+                    if not self.staging.try_put(
+                            StagedItem(step, task.name, None, group=group)):
+                        break
+            except Closed:
+                pass
+        self._drain_fanout(group)    # help-first: this thread works too
+        group.wait()                 # gather barrier for stolen items
+        if group.errors:
+            raise group.errors[0]
+        return stage.gather(step, payload, group.results)
 
     def _run_async_item(self, task: PipelineTask, item: StagedItem) -> None:
         t0 = time.perf_counter()

@@ -48,6 +48,91 @@ def test_roundtrip_all_modes(mode, tmp_path):
     assert int(restored["step"]) == 3
 
 
+def test_v2_layout_single_shard_and_offset_table(tmp_path):
+    """Default format: every blob packed into shard files named by an
+    offset-table manifest — file count independent of leaf count."""
+    state = _state()
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             mode=InSituMode.SYNC, every=1))
+    mgr.save(4, state)
+    d = tmp_path / "step_000000004"
+    files = sorted(os.listdir(d))
+    assert files == ["manifest.json", "shard_000.bin"]
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert manifest["format"] == 2
+    entries = manifest["leaves"]
+    assert len(entries) == 7          # w, b, mu.{w,b}, nu.{w,b}, step
+    for ent in entries.values():
+        assert set(ent) == {"file", "offset", "bytes", "raw_bytes",
+                            "lossy", "bf16"}
+        assert ent["file"] == "shard_000.bin"
+    # offsets tile the shard exactly: sorted offsets are contiguous
+    spans = sorted((e["offset"], e["bytes"]) for e in entries.values())
+    pos = 0
+    for off, nbytes in spans:
+        assert off == pos
+        pos += nbytes
+    assert pos == (d / "shard_000.bin").stat().st_size
+
+
+def test_v2_multi_shard_roundtrip(tmp_path):
+    state = _state()
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             mode=InSituMode.SYNC, every=1,
+                                             shard_count=3))
+    mgr.save(6, state)
+    d = tmp_path / "step_000000006"
+    shards = [f for f in os.listdir(d) if f.startswith("shard_")]
+    assert 1 < len(shards) <= 3       # byte-balanced upper bound
+    step, restored = mgr.restore(state)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"].astype(jnp.float32)),
+        np.asarray(state["params"]["w"].astype(jnp.float32)))
+
+
+def test_v1_format_still_writable_and_restores(tmp_path):
+    """format=1 keeps the per-leaf-file layout (benchmark baseline)."""
+    state = _state()
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             mode=InSituMode.SYNC, every=1,
+                                             format=1, leaf_parallel=False))
+    mgr.save(8, state)
+    d = tmp_path / "step_000000008"
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert manifest["format"] == 1
+    blobs = [f for f in os.listdir(d) if f.endswith(".bin")]
+    assert len(blobs) == len(manifest["leaves"])    # one file per leaf
+    assert all("offset" not in e for e in manifest["leaves"].values())
+    step, restored = mgr.restore(state)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"].astype(jnp.float32)),
+        np.asarray(state["params"]["w"].astype(jnp.float32)))
+
+
+def test_serial_encode_matches_leaf_parallel(tmp_path):
+    """leaf_parallel only changes scheduling: stored bytes are identical."""
+    state = _state()
+    outs = {}
+    for name, flag in (("fan", True), ("serial", False)):
+        d = tmp_path / name
+        mgr = CheckpointManager(CheckpointConfig(str(d), mode=InSituMode.SYNC,
+                                                 every=1, leaf_parallel=flag))
+        mgr.save(1, state)
+        outs[name] = (d / "step_000000001" / "shard_000.bin").read_bytes()
+    assert outs["fan"] == outs["serial"]
+
+
+def test_config_validation_rejects_bad_values(tmp_path):
+    with pytest.raises(ValueError, match="every"):
+        CheckpointConfig(str(tmp_path), every=0)     # was: ZeroDivisionError
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointConfig(str(tmp_path), keep=-1)
+    with pytest.raises(ValueError, match="format"):
+        CheckpointConfig(str(tmp_path), format=3)
+    with pytest.raises(ValueError, match="shard_count"):
+        CheckpointConfig(str(tmp_path), shard_count=0)
+
+
 def test_checkpoint_compression_beats_raw(tmp_path):
     state = _state()
     mgr = CheckpointManager(CheckpointConfig(str(tmp_path),

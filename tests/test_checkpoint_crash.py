@@ -1,0 +1,222 @@
+"""Crash consistency: kill-point tests over the commit/durability protocol.
+
+The commit protocol is blobs (fsynced) -> manifest (fsynced, renamed in) ->
+directory publish (sibling rename aside, rename in, parent fsync, remove
+aside). These tests simulate a crash at each stage — by reconstructing the
+exact on-disk debris that stage leaves behind — and assert that ``restore``
+either returns the previous step or raises cleanly, for BOTH layouts:
+v2 (packed shards, offset table) and v1 (one blob file per leaf).
+"""
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import (CheckpointConfig, CheckpointCorruptError,
+                              CheckpointManager, serialization as ser)
+from repro.core.insitu import InSituMode
+
+FORMATS = (1, 2)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(k, (64, 32), jnp.float32),
+              "b": jnp.zeros((32,), jnp.float32)}
+    st = optim.init(params, optim.AdamWConfig())
+    return {"params": params, "opt": {"mu": st.mu, "nu": st.nu}}
+
+
+def _mgr(directory, fmt, **kw):
+    return CheckpointManager(CheckpointConfig(
+        str(directory), mode=InSituMode.SYNC, every=1, format=fmt, **kw))
+
+
+def _data_files(d):
+    return sorted(f for f in os.listdir(d) if f.endswith(".bin"))
+
+
+def _backdate(path, age_s=3600):
+    """Make debris look old: sweep_stale keeps fresh tmp dirs (they may
+    belong to a still-live writer) and only removes genuinely stale ones.
+    Liveness looks at the dir AND its contents, so backdate both."""
+    t = time.time() - age_s
+    for p in [path] + [os.path.join(path, n) for n in os.listdir(path)]:
+        os.utime(p, (t, t))
+
+
+# -- kill point 1: blobs written, no manifest ---------------------------------
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_crash_before_manifest_previous_step_restores(tmp_path, fmt):
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(1, state)
+    # crash mid-save of step 2: tmp dir holds blobs but no manifest yet
+    tmp = tmp_path / ".tmp_step_000000002"
+    shutil.copytree(tmp_path / "step_000000001", tmp)
+    os.remove(tmp / "manifest.json")
+    _backdate(tmp)
+    assert mgr.list_steps() == [1]
+    step, _ = mgr.restore(state)
+    assert step == 1
+    # a restarted manager sweeps the (stale) debris
+    m2 = _mgr(tmp_path, fmt)
+    assert not (tmp_path / ".tmp_step_000000002").exists()
+    assert m2.list_steps() == [1]
+
+
+# -- kill point 2: manifest tmp written, rename never happened ----------------
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_crash_before_manifest_rename_is_invisible(tmp_path, fmt):
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(1, state)
+    tmp = tmp_path / ".tmp_step_000000003"
+    shutil.copytree(tmp_path / "step_000000001", tmp)
+    os.replace(tmp / "manifest.json", tmp / "manifest.json.tmp")
+    _backdate(tmp)
+    assert mgr.list_steps() == [1]
+    step, _ = mgr.restore(state)
+    assert step == 1
+    _mgr(tmp_path, fmt)
+    assert not tmp.exists()
+
+
+def test_sweep_spares_fresh_tmp_dirs_of_a_live_writer(tmp_path):
+    """A replacement manager must not rmtree a tmp dir another writer is
+    actively filling: fresh tmp dirs survive the sweep, stale ones don't."""
+    state = _state()
+    mgr = _mgr(tmp_path, 2)
+    mgr.save(1, state)
+    fresh = tmp_path / ".tmp_step_000000002"
+    shutil.copytree(tmp_path / "step_000000001", fresh)
+    _mgr(tmp_path, 2)
+    assert fresh.exists()                  # could be in-flight: kept
+    _backdate(fresh)
+    _mgr(tmp_path, 2)
+    assert not fresh.exists()              # genuinely stale: swept
+
+
+# -- kill point 3: crash inside commit, old copy moved aside ------------------
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_crash_mid_commit_recovers_displaced_step(tmp_path, fmt):
+    """Crash between the aside rename and the publish rename: the only copy
+    of the step sits at .old_step_N. A restarted manager re-publishes it —
+    the pre-fix rmtree-then-replace protocol would have destroyed it."""
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(5, state)
+    os.replace(tmp_path / "step_000000005",
+               tmp_path / ".old_step_000000005")
+    assert mgr.list_steps() == []          # mid-commit: step invisible...
+    m2 = _mgr(tmp_path, fmt)
+    assert m2.list_steps() == [5]          # ...until recovery republishes it
+    step, restored = m2.restore(state)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_crash_after_commit_drops_stale_aside_copy(tmp_path, fmt):
+    """Crash after the publish rename but before the aside copy's removal:
+    both step_N and .old_step_N exist; recovery keeps the new one."""
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(5, state)
+    shutil.copytree(tmp_path / "step_000000005",
+                    tmp_path / ".old_step_000000005")
+    m2 = _mgr(tmp_path, fmt)
+    assert not (tmp_path / ".old_step_000000005").exists()
+    assert m2.list_steps() == [5]
+
+
+def test_resave_same_step_never_deletes_the_only_copy(tmp_path):
+    """Overwriting a step goes through the aside rename, so at every instant
+    one complete copy exists; the result is the newer save."""
+    state = _state()
+    mgr = _mgr(tmp_path, 2)
+    mgr.save(7, state)
+    mgr.save(7, _state(seed=1))            # same step again
+    assert not (tmp_path / ".old_step_000000007").exists()
+    step, restored = mgr.restore(_state(seed=1))
+    assert step == 7
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_state(seed=1)["params"]["w"]))
+
+
+# -- corruption: truncated / missing stored bytes -----------------------------
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_truncated_data_file_raises_corrupt_error(tmp_path, fmt):
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(1, state)
+    d = tmp_path / "step_000000001"
+    victim = d / _data_files(d)[-1]
+    victim.write_bytes(victim.read_bytes()[:-16])
+    with pytest.raises(CheckpointCorruptError, match="truncated"):
+        mgr.restore(state)
+
+
+def test_missing_v1_blob_file_raises_corrupt_error(tmp_path):
+    state = _state()
+    mgr = _mgr(tmp_path, 1)
+    mgr.save(1, state)
+    d = tmp_path / "step_000000001"
+    os.remove(d / _data_files(d)[0])
+    with pytest.raises(CheckpointCorruptError, match="missing blob"):
+        mgr.restore(state)
+
+
+def test_missing_v2_shard_file_raises_corrupt_error(tmp_path):
+    state = _state()
+    mgr = _mgr(tmp_path, 2)
+    mgr.save(1, state)
+    os.remove(tmp_path / "step_000000001" / "shard_000.bin")
+    with pytest.raises(CheckpointCorruptError, match="missing shard"):
+        mgr.restore(state)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_template_leaf_missing_from_manifest_raises_keyerror(tmp_path, fmt):
+    """Tree-shape drift: restoring into a template with an extra leaf names
+    the leaf instead of failing deep inside decode."""
+    state = _state()
+    mgr = _mgr(tmp_path, fmt)
+    mgr.save(1, state)
+    grown = dict(state)
+    grown["extra"] = jnp.zeros((4,), jnp.float32)
+    with pytest.raises(KeyError, match="extra.*tree shape drifted"):
+        mgr.restore(grown)
+
+
+# -- the protocol end to end under async scheduling ---------------------------
+
+def test_async_saves_survive_manager_restart_with_debris(tmp_path):
+    state = _state()
+    m1 = _mgr(tmp_path, 2)
+    m1.save(1, state)
+    m1.save(2, state)
+    m1.runtime.drain()
+    # dead job left a partial tmp AND a stranded aside copy of step 1
+    shutil.copytree(tmp_path / "step_000000002",
+                    tmp_path / ".tmp_step_000000003")
+    _backdate(tmp_path / ".tmp_step_000000003")
+    os.replace(tmp_path / "step_000000001",
+               tmp_path / ".old_step_000000001")
+    m2 = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                            mode=InSituMode.ASYNC, every=1))
+    assert m2.list_steps() == [1, 2]
+    step, _ = m2.restore(state)
+    assert step == 2
+    m2.finish()

@@ -19,8 +19,8 @@ import numpy as np
 import pytest
 
 from repro.core import compression
-from repro.core.runtime import (PipelineRuntime, PipelineTask, Placement,
-                                Stage, run_pipeline, split_payload)
+from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
+                                Placement, Stage, run_pipeline, split_payload)
 from repro.core.telemetry import Telemetry
 
 
@@ -203,6 +203,95 @@ def test_drain_semantics_pending_transfers_all_materialize():
     run_pipeline(6, lambda i: {"x": lambda: jnp.full((4,), float(i))}, rt)
     assert sorted(r.result for r in rt.results) == [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
     assert rt.staging.gets == rt.staging.puts == 6
+
+
+# -- fan-out host stages ------------------------------------------------------
+
+def _fanout_task(fn, *, placement=Placement.ASYNC, sink=None):
+    stage = FanoutStage(
+        "enc",
+        split=lambda s, p: [(i, v) for i, v in enumerate(p)],
+        fn=fn,
+        gather=lambda s, p, results: {"orig": p, "results": results})
+    return PipelineTask("t", "x", host_stages=(stage,),
+                        sink=sink or (lambda s, p: p), placement=placement)
+
+
+def test_fanout_stage_spreads_items_across_pool_and_orders_results():
+    """Items of one firing are stolen by idle workers; gather sees the
+    original payload plus results in split order (the barrier contract)."""
+    threads = set()
+    # rendezvous makes the two-thread assertion deterministic: whichever
+    # thread takes item 0 blocks until a *different* thread reaches item 1,
+    # so a busy scheduler cannot let the coordinator self-drain everything
+    both = threading.Barrier(2, timeout=20)
+
+    def work(step, item):
+        i, v = item
+        threads.add(threading.current_thread().name)
+        if i < 2:
+            both.wait()
+        return i * 10 + v
+
+    rt = PipelineRuntime([_fanout_task(work)], workers=2)
+    payload = list(range(8))
+    # submit + wait (not run_pipeline): drain would close the ring before
+    # the stage runs, and tokens cannot be advertised on a closed ring
+    rt.submit(0, {"x": lambda: payload})
+    assert rt.wait_idle(timeout=30.0)
+    rt.drain()
+    assert not rt.errors, rt.errors[:1]
+    out = rt.results[0].result
+    assert out["orig"] == payload
+    assert out["results"] == [i * 10 + v for i, v in enumerate(payload)]
+    assert len(threads) == 2         # coordinator + a stealing worker
+    assert len(rt.telemetry.spans("stage/t/enc/item")) == 8
+    assert sum(s.name == "stage/t/enc"
+               for s in rt.telemetry.spans("stage/t/enc")) == 1
+
+
+def test_fanout_stage_works_with_a_single_worker():
+    """A lone worker coordinates AND executes every item (no deadlock even
+    though its steal tokens can never be claimed)."""
+    rt = PipelineRuntime([_fanout_task(lambda s, it: it[1] + 1)],
+                         workers=1, staging_capacity=1)
+    run_pipeline(2, lambda i: {"x": lambda: [1, 2, 3, 4, 5]}, rt)
+    assert not rt.errors, rt.errors[:1]
+    assert [r.result["results"] for r in rt.results] == [[2, 3, 4, 5, 6]] * 2
+    # tokens never occupy the ring's last free slot: on a capacity-1 ring
+    # no steal token was ever put (only the 2 firings themselves)
+    assert rt.staging.puts == 2
+
+
+def test_fanout_stage_under_sync_placement_runs_on_the_pool_too():
+    """SYNC: the loop thread coordinates; registration still spins up the
+    pool so items can be stolen."""
+    rt = PipelineRuntime(
+        [_fanout_task(lambda s, it: it[1] * 2, placement=Placement.SYNC)],
+        workers=2)
+    assert rt._threads            # pool exists despite SYNC placement
+    run_pipeline(1, lambda i: {"x": lambda: [3, 4]}, rt)
+    assert rt.results[0].result["results"] == [6, 8]
+
+
+def test_fanout_stage_empty_split_gathers_empty():
+    rt = PipelineRuntime([_fanout_task(lambda s, it: 1 / 0)], workers=1)
+    run_pipeline(1, lambda i: {"x": lambda: []}, rt)
+    assert not rt.errors
+    assert rt.results[0].result["results"] == []
+
+
+def test_fanout_stage_item_error_fails_the_firing():
+    def work(step, item):
+        if item[0] == 2:
+            raise RuntimeError("leaf 2 exploded")
+        return item[1]
+
+    rt = PipelineRuntime([_fanout_task(work)], workers=2)
+    run_pipeline(1, lambda i: {"x": lambda: [0, 1, 2, 3]}, rt)
+    assert len(rt.errors) == 1
+    assert "leaf 2 exploded" in str(rt.errors[0][2])
+    assert rt.results == []
 
 
 # -- split_payload ------------------------------------------------------------
