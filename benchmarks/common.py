@@ -26,9 +26,9 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core import (InSituMode, PipelineRuntime, PipelineTask, Telemetry,
-                        run_pipeline)
+from repro.core import InSituMode, Telemetry
 from repro.core.allocator import AmdahlModel
+from repro.insitu import Adaptive, Every, InSituPlan, Session, TaskSpec
 
 ROWS: list[tuple[str, float, str]] = []
 
@@ -65,14 +65,20 @@ def run_modes(task_fn: Callable[[int, Any], Any], payload: np.ndarray, *,
               modes=(InSituMode.SYNC, InSituMode.ASYNC),
               shards: int = 1, capacity: int = 4,
               backpressure: str = "block") -> dict[str, dict]:
-    """Run the same pipeline under each placement policy; return timings."""
+    """Run the same declared plan under each placement policy; timings."""
     out = {}
     for mode in modes:
-        rt = PipelineRuntime(
-            [PipelineTask("t", "x", sink=task_fn, placement=mode,
-                          every=every, shards=shards,
-                          backpressure=backpressure)],
+        trigger = (Adaptive(every) if backpressure == "adapt"
+                   else Every(every))
+        plan = InSituPlan(
+            streams=["x"],
+            tasks=[TaskSpec(name="t", stream="x", sink=task_fn,
+                            placement=mode, trigger=trigger,
+                            shards=shards,
+                            backpressure=(None if backpressure == "adapt"
+                                          else backpressure))],
             workers=p_i, staging_capacity=capacity)
+        session = Session(plan)
         dev = DeviceSim(step_s)
 
         def app_step(i):
@@ -80,12 +86,12 @@ def run_modes(task_fn: Callable[[int, Any], Any], payload: np.ndarray, *,
             return {"x": lambda: payload}
 
         t0 = time.perf_counter()
-        run_pipeline(n_steps, app_step, rt)
+        session.run(n_steps, app_step)
         wall = time.perf_counter() - t0
-        rep = rt.report()
+        rep = session.report()
         rep["wall_s"] = wall
-        rep["results"] = len(rt.results)
-        assert not rt.errors, rt.errors[:1]
+        rep["results"] = len(session.results)
+        assert not session.errors(), session.errors()[:1]
         out[mode.value] = rep
     return out
 

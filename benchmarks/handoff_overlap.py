@@ -33,8 +33,8 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import PipelineRuntime, PipelineTask, Placement, run_pipeline
 from repro.core import codecs
+from repro.insitu import InSituPlan, Placement, Session, TaskSpec
 
 ARTIFACT = "BENCH_runtime.json"
 
@@ -46,11 +46,14 @@ def _transfer(payload: np.ndarray) -> np.ndarray:
 
 def _run_mode(pipelined: bool, payload: np.ndarray, *, n: int,
               step_s: float) -> dict:
-    rt = PipelineRuntime(
-        [PipelineTask("xfer", "x", sink=lambda s, p: p.nbytes,
-                      handoff=lambda p: _transfer(p),
-                      placement=Placement.ASYNC, pipelined=pipelined)],
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="xfer", stream="x",
+                        sink=lambda s, p: p.nbytes,
+                        handoff=lambda p: _transfer(p),
+                        placement=Placement.ASYNC, pipelined=pipelined)],
         workers=1, staging_capacity=2)
+    session = Session(plan)
     dev = common.DeviceSim(step_s)
 
     def app_step(i):
@@ -58,11 +61,11 @@ def _run_mode(pipelined: bool, payload: np.ndarray, *, n: int,
         return {"x": lambda: payload}
 
     t0 = time.perf_counter()
-    run_pipeline(n, app_step, rt)
+    session.run(n, app_step)
     wall = time.perf_counter() - t0
-    assert not rt.errors, rt.errors[:1]
-    assert len(rt.results) == n
-    rep = rt.report()
+    assert not session.errors(), session.errors()[:1]
+    assert len(session.results) == n
+    rep = session.report()
     rep["wall_s"] = wall
     return rep
 

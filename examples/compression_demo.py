@@ -14,9 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.core import codecs
-from repro.core.insitu import InSituMode
+from repro.insitu import InSituPlan, Session
 from repro.kernels import ops, ref
 
 
@@ -47,16 +46,20 @@ def main() -> None:
     st = optim.init(params, optim.AdamWConfig())
     state = {"params": params, "mu": st.mu, "nu": st.nu}
     d = tempfile.mkdtemp()
-    mgr = CheckpointManager(CheckpointConfig(d, mode=InSituMode.HYBRID,
-                                             every=1))
-    mgr.save(100, state)
-    mgr.wait_idle()
-    mgr.finish()
-    rep = mgr.reports[-1]
+    plan = InSituPlan.from_dict({
+        "streams": ["train_state"],
+        "tasks": {"checkpoint": {"stream": "train_state",
+                                 "preset": "checkpoint",
+                                 "placement": "hybrid", "every": 1,
+                                 "options": {"directory": d}}},
+    })
+    with Session(plan, raise_on_error=True) as session:
+        session.emit("train_state", 100, lambda: state)
+    rep = session.checkpoint.reports[-1]
     print(f"  checkpoint: {rep.raw_bytes} B raw -> {rep.stored_bytes} B "
           f"stored (CR {rep.ratio * 100:.1f}%), "
           f"{rep.lossy_leaves}/{rep.n_leaves} leaves lossy")
-    step, restored = mgr.restore(state)
+    step, restored = session.restore(state)
     exact = bool(jnp.all(restored["params"]["w"] == params["w"]))
     print(f"  restored step {step}: weights bit-exact = {exact}")
 

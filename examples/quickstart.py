@@ -1,9 +1,14 @@
-"""Quickstart: the in-situ engine in 60 lines.
+"""Quickstart: the declarative in-situ API in 60 lines.
 
-Runs a tiny jitted "simulation" (a training step stand-in), attaches the
-three in-situ modes from the paper, and prints the telemetry that the paper
-reads off NSight: sync stalls the loop, async hides the work behind the
-device, hybrid ships 25-50x less data across the device->host boundary.
+Runs a tiny jitted "simulation" (a training step stand-in), declares the
+same compression probe under the paper's three placements, and prints the
+telemetry the paper reads off NSight: sync stalls the loop, async hides the
+work behind the device, hybrid runs a device stage that ships 4-8x less
+data across the device->host boundary.
+
+The workflow is *declared* as an ``InSituPlan`` (streams + triggers +
+tasks) and driven through a ``Session`` — the application's only in-situ
+call is ``session.emit``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import InSituEngine, InSituMode, InSituTask, run_workflow
+from repro.insitu import Every, InSituPlan, Placement, Session, TaskSpec
 from repro.core import codecs
 from repro.kernels import ops
 
@@ -29,32 +34,34 @@ def main() -> None:
             x = jnp.tanh(x @ w)
         return x
 
-    state = {"x": jnp.ones((512, 512), jnp.float32)}
-
-    def app_step(i):
-        state["x"] = sim_step(state["x"])
-        state["x"].block_until_ready()
-        return {
-            "raw": lambda: np.asarray(state["x"]),
-            # hybrid: the lossy stage runs on DEVICE; host gets int8 residue
-            "residue": lambda: np.asarray(
-                ops.spectral_compress(state["x"], 1e-2).q),
-        }
-
     def compress(step, payload):
-        blob, st = codecs.encode(payload, "zlib")
+        blob, st = codecs.encode(np.asarray(payload), "zlib")
         return st.ratio
 
-    for mode, source in ((InSituMode.SYNC, "raw"),
-                         (InSituMode.ASYNC, "raw"),
-                         (InSituMode.HYBRID, "residue")):
-        engine = InSituEngine(
-            [InSituTask("compress", source, compress, mode=mode, every=2)],
-            p_i=2)
+    # hybrid's deeply-coupled device stage: lossy-compress ON DEVICE so the
+    # hand-off ships the small int8 residue (the NEKO pattern)
+    def device_lossy(step, x):
+        return ops.spectral_compress(x, 1e-2).q
+
+    for mode in (Placement.SYNC, Placement.ASYNC, Placement.HYBRID):
+        plan = InSituPlan(
+            streams=["field"],
+            tasks=[TaskSpec(
+                name="compress", stream="field", trigger=Every(2),
+                placement=mode, sink=compress,
+                device_stage=device_lossy if mode is Placement.HYBRID
+                else None)],
+            workers=2)
+        state = jnp.ones((512, 512), jnp.float32)
         t0 = time.perf_counter()
-        run_workflow(10, app_step, engine)
+        with Session(plan, raise_on_error=True) as session:
+            for i in range(10):
+                with session.step_span(i):
+                    state = sim_step(state)
+                    state.block_until_ready()
+                session.emit("field", i, lambda: state)
         wall = time.perf_counter() - t0
-        rep = engine.report()
+        rep = session.report()
         print(f"{mode.value:6s}: wall={wall:.3f}s "
               f"stall={rep['sync_stall_s']:.3f}s "
               f"overlapped={rep['async_overlapped_s']:.3f}s "

@@ -1,9 +1,13 @@
 """End-to-end driver: train a ~100M-param model with the full in-situ stack.
 
 smollm-135m at REDUCED width on CPU (pass --full-135m on real hardware), a
-few hundred steps, with:
-  * async in-situ analytics every 10 steps (grad health + weight spectra)
-  * async compressed checkpointing every 50 steps (lossy moments)
+few hundred steps, with the whole in-situ workflow — analytics and
+compressed checkpointing — declared as one plain-dict ``InSituPlan``
+(exactly what a TOML/JSON launcher config would contain):
+
+  * async grad-health analytics every 10 steps on the ``grads`` stream
+  * async compressed checkpointing every 50 steps (lossy moments) on the
+    ``train_state`` stream
   * restart support: rerun the same command after an interruption and it
     resumes from the latest atomic checkpoint.
 
@@ -25,20 +29,36 @@ def main() -> None:
                     help="use the full config (needs accelerator memory)")
     args = ap.parse_args()
 
-    out = train_loop(
-        args.arch, steps=args.steps, smoke=not args.full_135m,
-        insitu_mode=args.insitu, ckpt_dir=args.ckpt_dir, ckpt_every=50,
-        analytics_every=10)
+    # the whole in-situ workflow, declared as data (TOML/JSON-loadable)
+    plan = {
+        "streams": ["grads", "train_state"],
+        "workers": 2,
+        "tasks": {
+            "analytics": {"stream": "grads", "preset": "grad_health",
+                          "every": 10, "placement": args.insitu},
+            "checkpoint": {"stream": "train_state", "preset": "checkpoint",
+                           "every": 50, "placement": args.insitu,
+                           "options": {"directory": args.ckpt_dir}},
+        },
+    }
+    out = train_loop(args.arch, steps=args.steps, smoke=not args.full_135m,
+                     plan=plan)
 
     losses = out["losses"]
     print(f"\nfirst loss {losses[0]:.4f} -> last loss {losses[-1]:.4f} "
           f"({len(losses)} steps)")
     print(f"in-situ artifacts produced: {out['insitu_results']}")
-    rep = out["telemetry"].step_overlap_report()
+    rep = out["session_report"]
     print(f"device compute {rep['step_compute_s']:.2f}s | "
           f"sync stalls {rep['sync_stall_s']:.2f}s | "
           f"async overlapped {rep['async_overlapped_s']:.2f}s | "
           f"hand-off {rep['handoff_s']:.2f}s")
+    if "checkpoint" in rep:
+        ck = rep["checkpoint"]
+        print(f"checkpoints: {ck['saves']} saves, "
+              f"{ck['raw_bytes'] / 1e6:.1f}MB raw -> "
+              f"{ck['stored_bytes'] / 1e6:.1f}MB stored, "
+              f"kept steps {ck['kept_steps']}")
     print(f"stragglers: {out['straggler_report']['stragglers']}")
 
 

@@ -1,13 +1,24 @@
-"""The paper's contribution: in-situ task placement for accelerator loops."""
+"""The paper's contribution: in-situ task placement for accelerator loops.
+
+New code should use the declarative API (``repro.insitu``, implemented in
+``repro.core.session``); ``InSituEngine``/``run_workflow``/``run_pipeline``
+are deprecation shims over it.
+"""
 from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
                                run_workflow)
 from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
                                 Placement, Stage, TaskResult, run_pipeline,
                                 split_payload)
+from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
+                                Interval, PlanError, Session, StreamSpec,
+                                TaskSpec, When, preset_names, register_preset)
 from repro.core.staging import PendingHandoff, StagedItem, StagingBuffer
 from repro.core.telemetry import Telemetry
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
            "FanoutStage", "PipelineRuntime", "PipelineTask", "Placement",
            "Stage", "TaskResult", "run_pipeline", "split_payload",
+           "Adaptive", "Every", "InSituPlan", "InSituTaskError", "Interval",
+           "PlanError", "Session", "StreamSpec", "TaskSpec", "When",
+           "preset_names", "register_preset",
            "PendingHandoff", "StagedItem", "StagingBuffer", "Telemetry"]

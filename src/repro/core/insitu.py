@@ -1,36 +1,34 @@
-"""InSituEngine — compatibility shim over ``repro.core.runtime``.
+"""InSituEngine — deprecation shim over ``repro.core.session``.
 
-Fig. 1 of the paper, mapped to a JAX device loop (see runtime.py for the
-authoritative semantics — SYNC/ASYNC/HYBRID are scheduling policies of one
-shared worker-pool scheduler):
+Fig. 1 of the paper, mapped to a JAX device loop (see session.py for the
+declarative API and runtime.py for the scheduling semantics — SYNC/ASYNC/
+HYBRID are policies of one shared worker-pool scheduler):
 
   SYNC   (Fig. 1a): the loop *blocks*: device->host hand-off, then the task
          runs inline on the loop thread — the GPU stall the paper's NSight
-         timelines show. Sharded sync firings ride the shared pool behind a
-         latch.
+         timelines show.
   ASYNC  (Fig. 1b): the loop blocks only for the hand-off (ADIOS2-send
          analog); p_i pool workers consume the bounded staging ring
-         concurrently with subsequent device steps. A slow in-situ side
-         eventually exerts backpressure (F3).
+         concurrently with subsequent device steps.
   HYBRID (Fig. 1c): a deeply-coupled device stage shrinks the payload; the
          hand-off moves the small residue; host stages run async.
 
-The MPMD resource split p_o + p_i = p_t becomes a host-thread split: the
-training loop plus data pipeline hold p_o threads, the runtime pool owns
-p_i workers. Host codecs and numpy release the GIL, so the overlap is real
-in-process.
-
 This module keeps the original task-list API (``InSituTask`` with a single
-``fn``); each task lowers to a single-sink ``PipelineTask``. New code
-should declare pipelines against ``repro.core.runtime`` directly.
+``fn``); each engine is now a thin wrapper around a
+:class:`~repro.core.session.Session` built from the equivalent
+:class:`~repro.core.session.InSituPlan` — every task source becomes a
+stream, every ``every=`` int becomes an ``Every`` trigger. New code should
+declare an ``InSituPlan`` and drive a ``Session`` directly
+(``repro.insitu``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-from repro.core.runtime import (Placement, PipelineRuntime, PipelineTask,
-                                TaskResult, run_pipeline, split_payload)
+from repro.core.runtime import (Placement, PipelineTask, TaskResult,
+                                split_payload)
+from repro.core.session import Every, InSituPlan, Session, TaskSpec
 from repro.core.telemetry import Telemetry
 
 PyTree = Any
@@ -64,29 +62,41 @@ class InSituTask:
     def split(self, payload: Any) -> list:
         return split_payload(payload, self.shards)
 
+    def to_spec(self) -> TaskSpec:
+        """Lower to the declarative form: source -> stream, fn -> sink."""
+        return TaskSpec(name=self.name, stream=self.source,
+                        trigger=Every(self.every), placement=self.mode,
+                        sink=self.fn, shards=self.shards)
+
     def to_pipeline(self) -> PipelineTask:
-        """Lower to the runtime's declarative form: the fn is the sink."""
+        """Legacy lowering straight to the runtime (kept for callers that
+        wire a PipelineRuntime themselves)."""
         return PipelineTask(self.name, self.source, sink=self.fn,
                             placement=self.mode, every=self.every,
                             shards=self.shards)
 
 
 class InSituEngine:
-    """Thin shim: owns a PipelineRuntime; the loop calls on_step()/finish()."""
+    """Thin shim: a Session built from the task list; on_step()/finish()."""
 
     def __init__(self, tasks: list[InSituTask], *, p_i: int = 2,
                  staging_capacity: int = 4,
                  telemetry: Optional[Telemetry] = None) -> None:
         self.tasks = list(tasks)
         self.p_i = p_i
-        self.runtime = PipelineRuntime(
-            [t.to_pipeline() for t in self.tasks], workers=p_i,
-            staging_capacity=staging_capacity, telemetry=telemetry)
+        streams = list(dict.fromkeys(t.source for t in self.tasks))
+        self.session = Session(
+            InSituPlan(streams=streams,
+                       tasks=[t.to_spec() for t in self.tasks],
+                       workers=p_i, staging_capacity=staging_capacity),
+            telemetry=telemetry)
+        self.session._strict_streams = False   # legacy providers-dict contract
+        self.runtime = self.session.runtime
 
-    # the engine's public state is the runtime's state
+    # the engine's public state is the session's state
     @property
     def telemetry(self) -> Telemetry:
-        return self.runtime.telemetry
+        return self.session.telemetry
 
     @property
     def staging(self):
@@ -102,20 +112,34 @@ class InSituEngine:
 
     def on_step(self, step: int,
                 providers: dict[str, Callable[[], Any]]) -> None:
-        """Called once per training step, after the step is dispatched."""
-        self.runtime.submit(step, providers)
+        """Called once per training step, after the step is dispatched.
+
+        Providers for sources no task declared are ignored (the legacy
+        contract: the loop offers everything, tasks pick)."""
+        for source, provider in providers.items():
+            self.session.emit(source, step, provider)
 
     def finish(self, timeout: float = 600.0) -> None:
         """Drain the ring and join workers (the paper's non-overlapped tail)."""
-        self.runtime.drain(timeout=timeout)
+        self.session.finish(timeout=timeout, raise_on_error=False)
 
     def report(self) -> dict[str, Any]:
-        return self.runtime.report()
+        return self.session.report()
 
 
 def run_workflow(n_steps: int,
                  app_step: Callable[[int], dict[str, Callable[[], Any]]],
                  engine: InSituEngine,
                  block_each_step: bool = True) -> Telemetry:
-    """Run ``n_steps`` of the application with the in-situ engine attached."""
-    return run_pipeline(n_steps, app_step, engine.runtime)
+    """Run ``n_steps`` of the application with the in-situ engine attached.
+
+    Deprecation shim: drives the engine's Session exactly like
+    ``Session.run``, keeping the legacy providers-dict contract.
+    """
+    tm = engine.telemetry
+    for step in range(n_steps):
+        with tm.span("step/compute", step=step):
+            providers = app_step(step)
+        engine.on_step(step, providers)
+    engine.finish()
+    return tm

@@ -611,7 +611,7 @@ class PipelineRuntime:
 
 
 # ---------------------------------------------------------------------------
-# Workflow driver: app loop + runtime, used by examples/benchmarks/tests.
+# Workflow driver: deprecation shim over repro.core.session.Session.
 # ---------------------------------------------------------------------------
 
 def run_pipeline(n_steps: int,
@@ -622,11 +622,10 @@ def run_pipeline(n_steps: int,
     ``app_step(step)`` dispatches one device step and returns the providers
     dict (lazy payload getters); the loop waits for the device result inside
     a ``step/compute`` span so device/in-situ attribution is exact.
+
+    Deprecation shim: wraps the runtime in a
+    :class:`~repro.core.session.Session` and drives ``Session.run`` — new
+    code should declare an ``InSituPlan`` and own the Session directly.
     """
-    tm = runtime.telemetry
-    for step in range(n_steps):
-        with tm.span("step/compute", step=step):
-            providers = app_step(step)
-        runtime.submit(step, providers)
-    runtime.drain()
-    return tm
+    from repro.core.session import Session
+    return Session.over_runtime(runtime).run(n_steps, app_step)

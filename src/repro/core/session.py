@@ -1,0 +1,839 @@
+"""The declarative in-situ API: ``InSituPlan`` + ``Session``.
+
+The paper's central claim is that in-situ tasks should be *declared
+against* a running application, not hand-wired into it (SENSEI's generic
+interface; openPMD/ADIOS2's declarative pipeline descriptions). This module
+is that surface for the whole tree — every workflow (training analytics,
+checkpointing, serving snapshots, benchmark probes) is one *plan*:
+
+  streams   named payload sources the application emits
+            (``grads``, ``train_state``, ``kv_pages``, ...)
+  triggers  when a task fires: ``Every(n)`` steps, ``When(predicate)``,
+            ``Interval(seconds)`` of wall clock, or ``Adaptive(n)``
+            (backpressure-widened every-N) — replacing scattered
+            ``every=`` ints
+  tasks     what runs: an explicit ``device_stage -> handoff ->
+            host_stages -> sink`` chain, or a registered *preset*
+            (``checkpoint``, ``grad_health``, ``spectra``,
+            ``serve_snapshot``)
+
+A plan is validated at construction (errors name the offending
+stream/task) and is loadable from a plain dict — and therefore from
+TOML/JSON — so launchers, examples, and benchmarks all build workflows the
+same way::
+
+    plan = InSituPlan.from_dict({
+        "streams": ["grads", "train_state"],
+        "tasks": {
+            "grad_health": {"stream": "grads", "preset": "grad_health",
+                            "every": 10},
+            "checkpoint": {"stream": "train_state", "preset": "checkpoint",
+                           "every": 50,
+                           "options": {"directory": "/tmp/ckpt"}},
+        },
+    })
+    with Session(plan) as session:
+        for step in range(n_steps):
+            state = device_step(state)
+            session.emit("grads", step, lambda: summarize(state))
+            session.emit("train_state", step, lambda: state)
+    print(session.report())
+
+``Session`` owns ONE shared :class:`~repro.core.runtime.PipelineRuntime`
+(the paper's single p_o/p_i split), exposes :meth:`Session.emit` as the
+*only* producer call, folds :class:`~repro.checkpoint.CheckpointManager`
+in as a declared task on its stream (save/restore/retention unchanged),
+and merges telemetry, task results, errors, and checkpoint statistics into
+one :meth:`Session.report`.
+
+The legacy entry points (``InSituEngine``/``run_workflow`` in
+``core/insitu.py``, ``run_pipeline`` in ``core/runtime.py``) are thin
+deprecation shims over a ``Session``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
+
+from repro.core.runtime import (BACKPRESSURE_POLICIES, PipelineRuntime,
+                                PipelineTask, Placement, Stage,
+                                default_handoff)
+from repro.core.telemetry import Telemetry
+
+PyTree = Any
+
+
+class PlanError(ValueError):
+    """A plan failed validation; the message names the stream/task at fault."""
+
+
+class InSituTaskError(RuntimeError):
+    """A task raised during the run; re-raised by ``finish(raise_on_error=True)``.
+
+    Carries the declarative context (``stream``, ``task``, ``step``) so a
+    failure in an async worker is attributable without digging through
+    ``session.errors``; the original exception is chained as ``__cause__``.
+    """
+
+    def __init__(self, task: str, stream: str, step: int,
+                 original: BaseException) -> None:
+        super().__init__(
+            f"in-situ task {task!r} (stream {stream!r}) failed at step "
+            f"{step}: {type(original).__name__}: {original}")
+        self.task = task
+        self.stream = stream
+        self.step = step
+
+
+# ---------------------------------------------------------------------------
+# Triggers
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Every:
+    """Fire on every ``n``-th step (``step % n == 0``) — the paper's
+    "image every 50 / every 10" cadence. ``n`` must be >= 1."""
+    n: int = 1
+
+    def to_dict(self) -> dict:
+        return {"every": self.n}
+
+
+@dataclass(frozen=True)
+class Adaptive:
+    """Backpressure-adaptive every-N: starts at ``n``; under sustained
+    staging-ring pressure the runtime doubles the *effective* period (up to
+    ``max_every``) instead of stalling the producer — the paper's F3
+    mitigation as a trigger."""
+    n: int = 1
+    max_every: int = 64
+    after: int = 2            # consecutive full-ring firings before widening
+
+    def to_dict(self) -> dict:
+        return {"trigger": {"kind": "adaptive", "n": self.n,
+                            "max_every": self.max_every,
+                            "after": self.after}}
+
+
+@dataclass(frozen=True)
+class When:
+    """Fire when ``predicate(step)`` is true — e.g. loss spikes, phase
+    boundaries. Session-gated; not dict-serializable (a predicate is code)."""
+    predicate: Callable[[int], bool]
+
+    def to_dict(self) -> dict:
+        raise PlanError("When(predicate) triggers are code, not data — "
+                        "they cannot round-trip through a plan dict")
+
+
+@dataclass(frozen=True)
+class Interval:
+    """Fire at most once per ``seconds`` of wall clock (first emit always
+    fires) — the "checkpoint every 10 minutes" cadence, step-rate
+    independent."""
+    seconds: float
+
+    def to_dict(self) -> dict:
+        return {"trigger": {"kind": "interval", "seconds": self.seconds}}
+
+
+Trigger = Union[Every, Adaptive, When, Interval]
+
+
+def _trigger_from_dict(name: str, spec: Mapping[str, Any]) -> Trigger:
+    kind = spec.get("kind")
+    if kind == "every":
+        return Every(int(spec.get("n", 1)))
+    if kind == "adaptive":
+        return Adaptive(int(spec.get("n", 1)),
+                        max_every=int(spec.get("max_every", 64)),
+                        after=int(spec.get("after", 2)))
+    if kind == "interval":
+        return Interval(float(spec["seconds"]))
+    raise PlanError(f"task {name!r}: unknown trigger kind {kind!r} "
+                    "(expected 'every' | 'adaptive' | 'interval')")
+
+
+# ---------------------------------------------------------------------------
+# Streams and task bindings
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """One named payload stream the application will ``emit`` into."""
+    name: str
+    description: str = ""
+
+
+@dataclass
+class TaskSpec:
+    """One declared in-situ task bound to a stream.
+
+    Exactly one of ``preset`` or ``sink`` must be given:
+
+    ``preset``        name of a registered workflow preset (``checkpoint``,
+                      ``grad_health``, ``spectra``, ``serve_snapshot``);
+                      ``options`` parameterize it.
+    ``sink``          explicit terminal consumer ``sink(step, payload)``;
+                      ``host_stages`` / ``device_stage`` / ``handoff``
+                      complete the chain exactly as on
+                      :class:`~repro.core.runtime.PipelineTask`.
+
+    ``trigger``       when the task fires (default ``Every(1)``).
+    ``placement``     SYNC / ASYNC / HYBRID scheduling policy.
+    ``backpressure``  'block' | 'drop' | 'adapt' ring-full policy
+                      (an ``Adaptive`` trigger implies 'adapt').
+    ``shards``        split each firing into N independent sub-items.
+    ``pipelined``     two-phase hand-off (dispatch on the loop,
+                      materialize on the pool); ``False`` restores the
+                      blocking hand-off.
+    ``snapshot``      donation-proof device-side copy at dispatch.
+    """
+    name: str
+    stream: str
+    trigger: Trigger = field(default_factory=Every)
+    placement: Placement = Placement.ASYNC
+    preset: Optional[str] = None
+    options: dict = field(default_factory=dict)
+    sink: Optional[Callable[[int, Any], Any]] = None
+    host_stages: Sequence[Stage] = ()
+    device_stage: Optional[Callable[[int, Any], Any]] = None
+    handoff: Callable[[Any], Any] = default_handoff
+    backpressure: Optional[str] = None
+    shards: int = 1
+    pipelined: bool = True
+    snapshot: bool = True
+
+    def resolved_backpressure(self) -> str:
+        if self.backpressure is not None:
+            return self.backpressure
+        return "adapt" if isinstance(self.trigger, Adaptive) else "block"
+
+    def to_dict(self) -> dict:
+        """Declarative dict form; only preset tasks are data (callables
+        are code and raise :class:`PlanError`)."""
+        if self.preset is None:
+            raise PlanError(
+                f"task {self.name!r}: explicit sink/stage chains are code — "
+                "only preset tasks round-trip through a plan dict")
+        d: dict[str, Any] = {"stream": self.stream, "preset": self.preset,
+                             "placement": self.placement.value}
+        d.update(self.trigger.to_dict())
+        if self.options:
+            d["options"] = dict(self.options)
+        if self.backpressure is not None:
+            d["backpressure"] = self.backpressure
+        if self.shards != 1:
+            d["shards"] = self.shards
+        if not self.pipelined:
+            d["pipelined"] = False
+        if not self.snapshot:
+            d["snapshot"] = False
+        return d
+
+
+def _task_from_dict(name: str, spec: Mapping[str, Any]) -> TaskSpec:
+    spec = dict(spec)
+    if "every" in spec and "trigger" in spec:
+        raise PlanError(
+            f"task {name!r}: conflicting triggers — give either "
+            "'every' or 'trigger', not both")
+    if "trigger" in spec:
+        trigger = _trigger_from_dict(name, spec.pop("trigger"))
+    else:
+        trigger = Every(int(spec.pop("every", 1)))
+    placement = spec.pop("placement", "async")
+    if not isinstance(placement, Placement):
+        try:
+            placement = Placement(placement)
+        except ValueError:
+            raise PlanError(
+                f"task {name!r}: unknown placement {placement!r} "
+                f"(expected one of {[p.value for p in Placement]})") from None
+    known = {"stream", "preset", "options", "backpressure", "shards",
+             "pipelined", "snapshot"}
+    unknown = set(spec) - known
+    if unknown:
+        raise PlanError(f"task {name!r}: unknown field(s) {sorted(unknown)}")
+    if "stream" not in spec:
+        raise PlanError(f"task {name!r}: missing required field 'stream'")
+    return TaskSpec(name=name, stream=spec["stream"], trigger=trigger,
+                    placement=placement, preset=spec.get("preset"),
+                    options=dict(spec.get("options", {})),
+                    backpressure=spec.get("backpressure"),
+                    shards=int(spec.get("shards", 1)),
+                    pipelined=bool(spec.get("pipelined", True)),
+                    snapshot=bool(spec.get("snapshot", True)))
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+# A preset maps (TaskSpec) -> chain pieces for the shared runtime:
+#   {"sink": ..., "host_stages": ..., "device_stage": ..., "handoff": ...}
+# The 'checkpoint' preset is special-cased by Session (it folds a whole
+# CheckpointManager — save/restore/retention — into the plan).
+_PRESETS: dict[str, Callable[[TaskSpec], dict]] = {}
+
+
+def register_preset(name: str):
+    """Register a workflow preset usable as ``TaskSpec(preset=name)``.
+
+    The decorated factory takes the :class:`TaskSpec` and returns the chain
+    pieces (``sink`` required; ``host_stages``/``device_stage``/``handoff``
+    optional). Presets keep plans declarative: a dict plan can name them
+    without shipping code.
+    """
+    def deco(factory: Callable[[TaskSpec], dict]):
+        _PRESETS[name] = factory
+        return factory
+    return deco
+
+
+def preset_names() -> list[str]:
+    """Registered preset names (plus the Session-built-in 'checkpoint')."""
+    return sorted(set(_PRESETS) | {"checkpoint"})
+
+
+@register_preset("grad_health")
+def _grad_health_preset(spec: TaskSpec) -> dict:
+    """Gradient-health roll-up artifact (global norm, norm sheet, NaN flags)."""
+    from repro.core import analysis
+
+    def sink(step: int, payload: Any):
+        return analysis.gradient_health(payload, step)
+
+    return {"sink": sink}
+
+
+@register_preset("spectra")
+def _spectra_preset(spec: TaskSpec) -> dict:
+    """Per-tensor spectral/histogram/heatmap artifacts (the paper's
+    "image generation" analog). Options: ``work`` (cost knob, default 1)."""
+    from repro.core import analysis
+    work = int(spec.options.get("work", 1))
+
+    def sink(step: int, payload: Any):
+        if isinstance(payload, Mapping):
+            return analysis.summarize_tree(payload, step, work=work)
+        return analysis.tensor_summary(spec.stream, payload, step, work=work)
+
+    return {"sink": sink}
+
+
+@register_preset("serve_snapshot")
+def _serve_snapshot_preset(spec: TaskSpec) -> dict:
+    """Compressed serving-state snapshot probe: losslessly compresses a
+    sample of the KV slab and reports the achieved ratio. Options:
+    ``codec`` (default 'zlib'), ``sample_elems`` (default 65536)."""
+    import jax
+    import numpy as np
+
+    from repro.core import compression
+    codec = str(spec.options.get("codec", "zlib"))
+    sample = int(spec.options.get("sample_elems", 65536))
+
+    def sink(step: int, payload: Any):
+        flat = jax.tree_util.tree_flatten(payload)[0]
+        arr = np.asarray(flat[0]).ravel()[:sample]
+        blob = compression.get(codec).encode(arr)
+        return (arr.nbytes - len(blob)) / max(arr.nbytes, 1)
+
+    return {"sink": sink}
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class InSituPlan:
+    """A validated, declarative description of every in-situ workflow.
+
+    ``streams``           the payload streams the application will emit
+                          (names or :class:`StreamSpec`).
+    ``tasks``             the :class:`TaskSpec` bindings.
+    ``workers``           p_i — worker threads of the shared runtime pool.
+    ``staging_capacity``  bounded staging-ring depth (double-buffering /
+                          backpressure horizon).
+
+    Construction validates the whole plan and raises :class:`PlanError`
+    naming the offending stream/task: unknown stream, duplicate task name,
+    ``every < 1``, unknown preset, preset+sink conflicts, more than one
+    checkpoint task, bad backpressure policy.
+    """
+    streams: Sequence[Union[str, StreamSpec]] = ()
+    tasks: Sequence[TaskSpec] = ()
+    workers: int = 2
+    staging_capacity: int = 4
+
+    def __post_init__(self) -> None:
+        specs = [s if isinstance(s, StreamSpec) else StreamSpec(str(s))
+                 for s in self.streams]
+        names = [s.name for s in specs]
+        for n in names:
+            if names.count(n) > 1:
+                raise PlanError(f"duplicate stream {n!r} in plan")
+            if not n:
+                raise PlanError("stream names must be non-empty")
+        self.streams = tuple(specs)
+        self.tasks = tuple(self.tasks)
+        if self.workers < 1:
+            raise PlanError(f"workers must be >= 1, got {self.workers}")
+        if self.staging_capacity < 1:
+            raise PlanError(
+                f"staging_capacity must be >= 1, got {self.staging_capacity}")
+        stream_names = set(names)
+        seen: set[str] = set()
+        n_ckpt = 0
+        for t in self.tasks:
+            if not t.name:
+                raise PlanError("task names must be non-empty")
+            if t.name in seen:
+                raise PlanError(f"duplicate task {t.name!r} in plan")
+            seen.add(t.name)
+            if t.stream not in stream_names:
+                raise PlanError(
+                    f"task {t.name!r} binds unknown stream {t.stream!r} "
+                    f"(declared streams: {sorted(stream_names)})")
+            if isinstance(t.trigger, (Every, Adaptive)) and t.trigger.n < 1:
+                raise PlanError(
+                    f"task {t.name!r}: trigger period must be >= 1, "
+                    f"got every={t.trigger.n}")
+            if isinstance(t.trigger, Interval) and t.trigger.seconds <= 0:
+                raise PlanError(
+                    f"task {t.name!r}: Interval seconds must be > 0, "
+                    f"got {t.trigger.seconds}")
+            if (isinstance(t.trigger, Adaptive) and t.backpressure is not None
+                    and t.backpressure != "adapt"):
+                raise PlanError(
+                    f"task {t.name!r}: conflicting triggers — Adaptive "
+                    f"requires backpressure 'adapt', got {t.backpressure!r}")
+            if t.resolved_backpressure() not in BACKPRESSURE_POLICIES:
+                raise PlanError(
+                    f"task {t.name!r}: backpressure must be one of "
+                    f"{BACKPRESSURE_POLICIES}, got {t.backpressure!r}")
+            if t.preset is not None and t.sink is not None:
+                raise PlanError(
+                    f"task {t.name!r}: give either a preset or an explicit "
+                    "sink chain, not both")
+            if t.preset is None and t.sink is None:
+                raise PlanError(
+                    f"task {t.name!r}: needs a preset or a sink")
+            if t.preset == "checkpoint":
+                n_ckpt += 1
+                if n_ckpt > 1:
+                    raise PlanError(
+                        f"task {t.name!r}: a plan may declare at most one "
+                        "checkpoint task")
+                if not t.options.get("directory"):
+                    raise PlanError(
+                        f"task {t.name!r}: checkpoint preset requires "
+                        "options={'directory': ...}")
+                # the manager owns its pipeline's scheduling knobs; accept
+                # only what is actually wired through rather than letting
+                # declared-but-ignored fields validate
+                if t.backpressure is not None:
+                    raise PlanError(
+                        f"task {t.name!r}: the checkpoint preset does not "
+                        "take a backpressure policy (the manager's "
+                        "pipeline uses 'block')")
+                if isinstance(t.trigger, Adaptive):
+                    raise PlanError(
+                        f"task {t.name!r}: the checkpoint preset gates "
+                        "saves session-side, so an Adaptive trigger would "
+                        "never widen — use Every/When/Interval")
+                if t.shards != 1 or not t.pipelined or not t.snapshot:
+                    raise PlanError(
+                        f"task {t.name!r}: checkpoint preset does not "
+                        "accept shards/pipelined/snapshot overrides")
+            elif t.preset is not None and t.preset not in _PRESETS:
+                raise PlanError(
+                    f"task {t.name!r}: unknown preset {t.preset!r} "
+                    f"(registered: {preset_names()})")
+            if t.shards < 1:
+                raise PlanError(
+                    f"task {t.name!r}: shards must be >= 1, got {t.shards}")
+
+    # -- dict round-trip ------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "InSituPlan":
+        """Build a plan from its plain-dict (TOML/JSON-loadable) form."""
+        known = {"streams", "tasks", "workers", "staging_capacity"}
+        unknown = set(d) - known
+        if unknown:
+            raise PlanError(f"unknown plan field(s) {sorted(unknown)}")
+        tasks_in = d.get("tasks", {})
+        if isinstance(tasks_in, Mapping):
+            items = list(tasks_in.items())
+        else:
+            items = []
+            for spec in tasks_in:
+                spec = dict(spec)
+                if "name" not in spec:
+                    raise PlanError("list-form tasks need a 'name' field")
+                items.append((spec.pop("name"), spec))
+        tasks = [_task_from_dict(name, spec) for name, spec in items]
+        return cls(streams=list(d.get("streams", [])), tasks=tasks,
+                   workers=int(d.get("workers", 2)),
+                   staging_capacity=int(d.get("staging_capacity", 4)))
+
+    def to_dict(self) -> dict:
+        """Plain-dict form (inverse of :meth:`from_dict`). Only declarative
+        content survives; explicit callable chains raise :class:`PlanError`."""
+        return {
+            "streams": [s.name for s in self.streams],
+            "tasks": {t.name: t.to_dict() for t in self.tasks},
+            "workers": self.workers,
+            "staging_capacity": self.staging_capacity,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+def _memoized(fn: Callable[[], Any]) -> Callable[[], Any]:
+    """Evaluate-once wrapper for emit providers: several tasks firing on
+    one stream share a single payload materialization. No lock — the
+    runtime evaluates providers synchronously on the emitting thread."""
+    sentinel = object()
+    cache: list = [sentinel]
+
+    def wrapper():
+        if cache[0] is sentinel:
+            cache[0] = fn()
+        return cache[0]
+
+    return wrapper
+
+
+class _Binding:
+    """One task wired into the live runtime (session-internal)."""
+
+    __slots__ = ("spec", "source", "session_gated", "last_fire_t", "mgr")
+
+    def __init__(self, spec: TaskSpec, source: str, session_gated: bool,
+                 mgr: Any = None) -> None:
+        self.spec = spec
+        self.source = source
+        self.session_gated = session_gated
+        self.last_fire_t: Optional[float] = None
+        self.mgr = mgr
+
+    def due(self, step: int, now: float) -> bool:
+        """Session-side gate. Every/Adaptive are runtime-gated (so the
+        'adapt' policy can widen the effective period); When/Interval are
+        evaluated here."""
+        trig = self.spec.trigger
+        if isinstance(trig, When):
+            return bool(trig.predicate(step))
+        if isinstance(trig, Interval):
+            if (self.last_fire_t is None
+                    or now - self.last_fire_t >= trig.seconds):
+                self.last_fire_t = now
+                return True
+            return False
+        return True          # Every/Adaptive: the runtime gates on its every
+
+
+class Session:
+    """A live in-situ session: one plan bound to one shared runtime.
+
+    Use as a context manager; the application's only obligations are to
+    ``emit(stream, step, payload)`` (payload may be a zero-arg callable —
+    it is then only evaluated if some task actually fires) and to exit the
+    context (or call :meth:`finish`)::
+
+        with Session(plan) as session:
+            for step in range(n):
+                ...device step...
+                session.emit("grads", step, lambda: grads)
+
+    The session owns placement, triggers, backpressure, checkpointing, and
+    reporting; nothing else in the application knows how tasks run.
+    """
+
+    def __init__(self, plan: Union[InSituPlan, Mapping[str, Any]], *,
+                 telemetry: Optional[Telemetry] = None,
+                 runtime: Optional[PipelineRuntime] = None,
+                 raise_on_error: bool = False) -> None:
+        if isinstance(plan, Mapping):
+            plan = InSituPlan.from_dict(plan)
+        self.plan = plan
+        self._owns_runtime = runtime is None
+        if runtime is None:
+            runtime = PipelineRuntime(
+                workers=plan.workers, staging_capacity=plan.staging_capacity,
+                telemetry=telemetry)
+        elif telemetry is not None and telemetry is not runtime.telemetry:
+            raise ValueError("pass either a telemetry or a runtime (whose "
+                             "telemetry is used), not two different objects")
+        self.runtime = runtime
+        self.checkpoint = None            # CheckpointManager, if declared
+        self._raise_on_error = raise_on_error
+        self._finished = False
+        self._strict_streams = True       # legacy wrappers relax this
+        self._task_stream: dict[str, str] = {}
+        self._by_stream: dict[str, list[_Binding]] = {
+            s.name: [] for s in plan.streams}
+        for spec in plan.tasks:
+            self._bind(spec)
+
+    # -- wiring ---------------------------------------------------------------
+
+    def _bind(self, spec: TaskSpec) -> None:
+        self._task_stream[spec.name] = spec.stream
+        if spec.preset == "checkpoint":
+            self._bind_checkpoint(spec)
+            return
+        if spec.preset is not None:
+            pieces = _PRESETS[spec.preset](spec)
+        else:
+            pieces = {"sink": spec.sink, "host_stages": spec.host_stages,
+                      "device_stage": spec.device_stage,
+                      "handoff": spec.handoff}
+        session_gated = isinstance(spec.trigger, (When, Interval))
+        every = (spec.trigger.n
+                 if isinstance(spec.trigger, (Every, Adaptive)) else 1)
+        adapt = (spec.trigger if isinstance(spec.trigger, Adaptive)
+                 else Adaptive())
+        task = PipelineTask(
+            name=spec.name,
+            source=f"{spec.stream}::{spec.name}",
+            sink=pieces["sink"],
+            host_stages=tuple(pieces.get("host_stages") or ()),
+            device_stage=pieces.get("device_stage"),
+            handoff=pieces.get("handoff") or default_handoff,
+            pipelined=spec.pipelined,
+            snapshot=spec.snapshot,
+            placement=spec.placement,
+            every=every,
+            shards=spec.shards,
+            backpressure=spec.resolved_backpressure(),
+            adapt_after=adapt.after,
+            adapt_max_every=adapt.max_every,
+        )
+        self.runtime.register(task)
+        self._by_stream[spec.stream].append(
+            _Binding(spec, task.source, session_gated))
+
+    def _bind_checkpoint(self, spec: TaskSpec) -> None:
+        """Fold a CheckpointManager into the session as a declared task.
+
+        Save/restore/retention semantics are the manager's, unchanged; the
+        manager registers its pipeline into the *shared* runtime, so
+        checkpoint writes and analytics draw from the same worker pool."""
+        from repro.checkpoint import CheckpointConfig, CheckpointManager
+        opts = dict(spec.options)
+        every = (spec.trigger.n
+                 if isinstance(spec.trigger, (Every, Adaptive)) else 1)
+        cfg = CheckpointConfig(
+            directory=opts.pop("directory"), mode=spec.placement,
+            every=every, **opts)
+        mgr = CheckpointManager(cfg, runtime=self.runtime)
+        self.checkpoint = mgr
+        self._by_stream[spec.stream].append(
+            _Binding(spec, "ckpt_state", True, mgr=mgr))
+
+    # -- producer side --------------------------------------------------------
+
+    def emit(self, stream: str, step: int, payload: Any) -> None:
+        """Offer one step's payload on a stream — the only producer call.
+
+        ``payload`` may be the value itself or a zero-arg callable; a
+        callable is evaluated at most once per emit — even when several
+        bound tasks fire at the same step — and only if at least one task
+        actually fires (lazy providers, exactly like the legacy engine's
+        providers dict).
+        """
+        bindings = self._by_stream.get(stream)
+        provider = (_memoized(payload) if callable(payload)
+                    else (lambda: payload))
+        if bindings is None:
+            if not self._strict_streams:
+                # legacy providers-dict contract: the loop offers every
+                # source, tasks pick; an unmatched source is a no-op
+                self.runtime.submit(step, {stream: provider})
+                return
+            raise PlanError(
+                f"emit on unknown stream {stream!r} (declared: "
+                f"{sorted(self._by_stream)})")
+        now = time.monotonic()
+        providers: dict[str, Callable[[], Any]] = {}
+        for b in bindings:
+            if b.session_gated and not b.due(step, now):
+                continue
+            if b.mgr is not None:
+                # checkpoint: session-gated; the manager's registered
+                # pipeline (every=1) does the save through the shared pool
+                if isinstance(b.spec.trigger, (Every, Adaptive)):
+                    if step % b.spec.trigger.n:
+                        continue
+                b.mgr.save(step, provider())
+                continue
+            providers[b.source] = provider
+        if providers:
+            self.runtime.submit(step, providers)
+
+    def step_span(self, step: int):
+        """Span context for the application's device step (``step/compute``)
+        so device/in-situ attribution in :meth:`report` is exact."""
+        return self.runtime.telemetry.span("step/compute", step=step)
+
+    def run(self, n_steps: int,
+            app_step: Callable[[int], Mapping[str, Any]],
+            finish: bool = True) -> Telemetry:
+        """Drive ``n_steps`` of an application against this session.
+
+        ``app_step(step)`` runs one device step inside a ``step/compute``
+        span and returns ``{stream: payload-or-provider}``; every entry is
+        emitted. The canonical workflow driver — the legacy
+        ``run_pipeline``/``run_workflow`` are shims over it.
+        """
+        for step in range(n_steps):
+            with self.step_span(step):
+                payloads = app_step(step)
+            for stream, payload in payloads.items():
+                self.emit(stream, step, payload)
+        if finish:
+            self.finish()
+        return self.telemetry
+
+    # -- state ----------------------------------------------------------------
+
+    @property
+    def streams(self) -> frozenset:
+        """The stream names this session accepts emits on — drivers with
+        optional workloads gate their emits on membership here (a custom
+        plan may declare only a subset of the default streams)."""
+        return frozenset(self._by_stream)
+
+    @property
+    def telemetry(self) -> Telemetry:
+        return self.runtime.telemetry
+
+    @property
+    def results(self):
+        """All TaskResults so far (checkpoint reports land here too)."""
+        return self.runtime.results
+
+    def errors(self) -> list[tuple[str, int, BaseException]]:
+        """Captured task failures as (task, step, exception)."""
+        return list(self.runtime.errors)
+
+    def stream_of(self, task: str) -> Optional[str]:
+        """The stream a task is bound to (None for tasks the plan doesn't
+        know, e.g. registered directly on a wrapped runtime)."""
+        if task == "checkpoint" and task not in self._task_stream:
+            for b_list in self._by_stream.values():
+                for b in b_list:
+                    if b.mgr is not None:
+                        return b.spec.stream
+        return self._task_stream.get(task)
+
+    # -- checkpoint passthrough ----------------------------------------------
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None) -> tuple[int, PyTree]:
+        """Restore from the plan's checkpoint task (elastic re-placement)."""
+        if self.checkpoint is None:
+            raise PlanError("plan declares no checkpoint task to restore from")
+        return self.checkpoint.restore(template, step, shardings)
+
+    def latest_checkpoint_step(self) -> Optional[int]:
+        if self.checkpoint is None:
+            return None
+        return self.checkpoint.latest_step()
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def wait_idle(self, timeout: float = 600.0) -> bool:
+        """Block until every enqueued async firing has finished."""
+        return self.runtime.wait_idle(timeout=timeout)
+
+    def finish(self, timeout: float = 600.0,
+               raise_on_error: Optional[bool] = None) -> None:
+        """Drain the ring, join the pool (the non-overlapped tail), and —
+        with ``raise_on_error=True`` — re-raise the first task failure as
+        :class:`InSituTaskError` with stream/task/step context instead of
+        leaving it silently in :meth:`errors`.
+
+        ``raise_on_error=None`` uses the session's constructor default.
+        Idempotent: later calls only re-check the error state.
+        """
+        if not self._finished:
+            self._finished = True
+            self.runtime.wait_idle(timeout=timeout)
+            if self._owns_runtime:
+                self.runtime.drain(timeout=timeout)
+        raise_ = (self._raise_on_error if raise_on_error is None
+                  else raise_on_error)
+        if raise_ and self.runtime.errors:
+            task, step, exc = self.runtime.errors[0]
+            stream = self.stream_of(task) or "?"
+            raise InSituTaskError(task, stream, step, exc) from exc
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # don't mask an in-flight application exception with a task error
+        self.finish(raise_on_error=False if exc_type is not None else None)
+
+    # -- reporting ------------------------------------------------------------
+
+    def report(self) -> dict[str, Any]:
+        """One merged report: telemetry overlap attribution, task results,
+        errors, backpressure state, and checkpoint statistics."""
+        rep = self.runtime.report()
+        def _runtime_name(t: TaskSpec) -> str:
+            # the checkpoint manager registers its pipeline under its own
+            # historical task name, whatever the plan called the binding
+            return "checkpoint" if t.preset == "checkpoint" else t.name
+
+        rep["tasks"] = {
+            t.name: {"stream": t.stream,
+                     "results": sum(1 for r in self.runtime.results
+                                    if r.task == _runtime_name(t)),
+                     "errors": sum(1 for (n, _, _) in self.runtime.errors
+                                   if n == _runtime_name(t))}
+            for t in self.plan.tasks}
+        rep["errors"] = [
+            {"task": n, "stream": self.stream_of(n) or "?", "step": s,
+             "error": f"{type(e).__name__}: {e}"}
+            for (n, s, e) in self.runtime.errors]
+        if self.checkpoint is not None:
+            reports = list(self.checkpoint.reports)
+            rep["checkpoint"] = {
+                "saves": len(reports),
+                "raw_bytes": sum(r.raw_bytes for r in reports),
+                "stored_bytes": sum(r.stored_bytes for r in reports),
+                "last_step": reports[-1].step if reports else None,
+                "kept_steps": self.checkpoint.list_steps(),
+            }
+        return rep
+
+    # -- legacy adapter --------------------------------------------------------
+
+    @classmethod
+    def over_runtime(cls, runtime: PipelineRuntime) -> "Session":
+        """Wrap an already-wired :class:`PipelineRuntime` (legacy path).
+
+        Streams mirror the registered tasks' ``source`` keys and gating is
+        purely runtime-side; ``emit``/``run``/``report``/``finish`` behave
+        identically. This is how the deprecation shims
+        (``run_pipeline``/``InSituEngine``) ride on a Session.
+        """
+        sess = cls(InSituPlan(), runtime=runtime)
+        sess._owns_runtime = True        # the shim transfers ownership
+        sess._strict_streams = False
+        for t in runtime.tasks:
+            sess._task_stream.setdefault(t.name, t.source)
+            sess._by_stream.setdefault(t.source, []).append(
+                _Binding(TaskSpec(name=t.name, stream=t.source,
+                                  sink=t.sink), t.source, False))
+        return sess

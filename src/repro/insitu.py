@@ -1,0 +1,38 @@
+"""``repro.insitu`` — the public in-situ API, one import for everything.
+
+Declare workflows with :class:`InSituPlan` (streams + triggers + task
+bindings, loadable from a plain dict) and run them with :class:`Session`::
+
+    from repro import insitu
+
+    plan = insitu.InSituPlan.from_dict({
+        "streams": ["grads", "train_state"],
+        "tasks": {
+            "grad_health": {"stream": "grads", "preset": "grad_health",
+                            "every": 10},
+            "checkpoint": {"stream": "train_state", "preset": "checkpoint",
+                           "every": 50,
+                           "options": {"directory": "/tmp/ckpt"}},
+        },
+    })
+    with insitu.Session(plan) as session:
+        for step in range(n_steps):
+            state = device_step(state)
+            session.emit("grads", step, lambda: summarize(state))
+            session.emit("train_state", step, lambda: state)
+
+See ``repro/core/session.py`` for the full semantics. The legacy entry
+points (``InSituEngine``, ``run_workflow``, ``run_pipeline``) remain as
+deprecation shims in ``repro.core``.
+"""
+from repro.core.runtime import FanoutStage, Placement, Stage
+from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
+                                Interval, PlanError, Session, StreamSpec,
+                                TaskSpec, Trigger, When, preset_names,
+                                register_preset)
+
+__all__ = [
+    "Adaptive", "Every", "FanoutStage", "InSituPlan", "InSituTaskError",
+    "Interval", "Placement", "PlanError", "Session", "Stage", "StreamSpec",
+    "TaskSpec", "Trigger", "When", "preset_names", "register_preset",
+]

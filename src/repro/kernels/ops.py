@@ -28,6 +28,23 @@ def _pad_blocks(xb: jax.Array, tile: int) -> jax.Array:
     return xb
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n > 2 else max(n, 1)
+
+
+def _bucket_rows(n_blocks: int) -> int:
+    """Shape bucket for the fused tree path: next power-of-two block count
+    (>= HIST_TILE, so every bucket stays tile-aligned)."""
+    return max(K.HIST_TILE, _next_pow2(n_blocks))
+
+
+def _pad_to_rows(xb: jax.Array, rows: int) -> jax.Array:
+    pad = rows - xb.shape[0]
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    return xb
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def _compress_padded(xb: jax.Array, eps: float, interpret: bool):
     if interpret:
@@ -64,21 +81,22 @@ def spectral_decompress(c: Compressed) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def _compress_tree_packed(leaves: tuple, eps: float, interpret: bool):
-    """ONE dispatch for every policy-selected leaf of a tree.
+def _compress_tree_packed(blocks: tuple, eps: float, interpret: bool):
+    """ONE fused dispatch over pre-bucketed per-leaf block groups.
 
-    All leaves (blockize normalizes every dtype to f32 blocks, so a single
-    packed group covers the whole tree) are padded to HIST_TILE multiples and
-    concatenated into one (total_blocks, BLOCK) buffer; the DCT runs once
-    over the packed buffer. Thresholds stay *per leaf* — selection statistics
-    are segment-summed back to per-leaf histograms — so the result is
-    bit-identical to the per-leaf path, with O(1) instead of O(leaves) host
-    dispatches.
+    ``blocks`` are the already-blockized leaves (f32 ``(rows_i, BLOCK)``,
+    each padded to a power-of-two row count by the caller — the
+    shape-bucketed trace cache); they are concatenated into one
+    (total_blocks, BLOCK) buffer and the DCT runs once over the packed
+    buffer. Thresholds stay *per leaf* — selection statistics are
+    segment-summed back to per-leaf histograms — so the result is
+    bit-identical to the per-leaf path (zero pad blocks carry zero energy
+    and cannot move any leaf's threshold). The jit trace therefore keys on
+    the *bucketed* row counts: an elastic mesh that resizes its leaves
+    re-traces only when a leaf crosses a power-of-two block-count boundary,
+    bounding compilation to O(log(max_blocks)) variants per leaf instead of
+    one per shape.
     """
-    blocks = []
-    for x in leaves:
-        xb, _ = ref.blockize(x)
-        blocks.append(_pad_blocks(xb, K.HIST_TILE))
     counts = [b.shape[0] for b in blocks]
     packed = jnp.concatenate(blocks, 0) if len(blocks) > 1 else blocks[0]
     if interpret:
@@ -127,8 +145,13 @@ def spectral_compress_tree(state, eps: float = 1e-2,
     policy fired — the hand-off then ships int8 coefficients + scales.
 
     ``fused`` (default) packs all selected leaves into one flat blocked
-    buffer and compresses the whole tree in a single dispatch (bit-identical
-    to the per-leaf path, which ``fused=False`` preserves for comparison).
+    buffer and compresses the whole tree in a single fused dispatch
+    (bit-identical to the per-leaf path, which ``fused=False`` preserves
+    for comparison). Each leaf's block count is padded up to the next
+    power of two before the fused call, so the jit trace cache buckets
+    elastic-mesh shape drift instead of re-tracing per tree shape; the
+    zero pad blocks carry no energy (thresholds are unchanged) and are
+    sliced off the result.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     new_leaves = [leaf for _, leaf in flat]
@@ -136,16 +159,29 @@ def spectral_compress_tree(state, eps: float = 1e-2,
                 if leaf is not None and policy is not None
                 and policy(jax.tree_util.keystr(path))]
     if fused and len(selected) > 1:
-        leaves = tuple(flat[i][1] for i in selected)
-        qs, scales = _compress_tree_packed(leaves, float(eps), _interpret())
-        for i, q, scale in zip(selected, qs, scales):
+        blocks, keep_rows = [], []
+        for i in selected:
+            xb, _ = ref.blockize(flat[i][1])
+            real = xb.shape[0] + ((-xb.shape[0]) % K.HIST_TILE)
+            keep_rows.append(real)
+            blocks.append(_pad_to_rows(xb, _bucket_rows(real)))
+        qs, scales = _compress_tree_packed(tuple(blocks), float(eps),
+                                           _interpret())
+        for i, q, scale, real in zip(selected, qs, scales, keep_rows):
             leaf = flat[i][1]
-            new_leaves[i] = Compressed(q, scale, int(leaf.size),
+            new_leaves[i] = Compressed(q[:real], scale[:real],
+                                       int(leaf.size),
                                        tuple(leaf.shape), leaf.dtype)
     else:
         for i in selected:
             new_leaves[i] = spectral_compress(flat[i][1], eps)
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def packed_tree_cache_size() -> int:
+    """Number of compiled variants of the fused tree kernel (trace-cache
+    introspection for the shape-bucketing tests/benchmarks)."""
+    return _compress_tree_packed._cache_size()
 
 
 # ---------------------------------------------------------------------------

@@ -10,21 +10,41 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.configs import base as configs
-from repro.core import PipelineRuntime, PipelineTask, Placement, Telemetry
-from repro.core import analysis, compression
+from repro.core import InSituPlan, Session, Telemetry
 from repro.models import params as P_lib
 from repro.models import transformer
 from repro.serving.engine import Request, ServingEngine
 
 
+def default_serve_plan(*, insitu_mode: str = "async",
+                       snapshot_every: int = 4, p_i: int = 2) -> dict:
+    """The serving loop's declarative in-situ plan (plain-dict form).
+
+    One stream — ``kv_pages``, the live KV cache slab — with the
+    ``serve_snapshot`` preset attached best-effort: drop on a full ring,
+    never stall the decode loop.
+    """
+    return {
+        "streams": ["kv_pages"],
+        "workers": p_i,
+        "tasks": {
+            "kv_snapshot": {"stream": "kv_pages", "preset": "serve_snapshot",
+                            "every": snapshot_every,
+                            "placement": insitu_mode,
+                            "backpressure": "drop"},
+        },
+    }
+
+
 def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                slots: int = 4, insitu_mode: str = "async",
-               seed: int = 0, log=print) -> dict:
+               seed: int = 0, plan: Optional[Any] = None, log=print) -> dict:
     cfg = configs.get(arch, smoke=True)
     params = P_lib.materialize(jax.random.PRNGKey(seed),
                                transformer.param_spec(cfg))
@@ -32,19 +52,11 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                            max_len=64)
     tm = Telemetry()
 
-    def snapshot_task(step, payload):
-        flat = jax.tree_util.tree_flatten(payload)[0]
-        arr = np.asarray(flat[0]).ravel()[:65536]
-        blob = compression.get("zlib").encode(arr)
-        return (arr.nbytes - len(blob)) / max(arr.nbytes, 1)
-
-    # serving-side in-situ: KV snapshot as a registered pipeline task,
-    # best-effort (drop on a full ring — never stall the decode loop)
-    insitu = PipelineRuntime(
-        [PipelineTask("kv_snapshot", "serving_state", sink=snapshot_task,
-                      placement=Placement(insitu_mode), every=4,
-                      backpressure="drop")],
-        workers=2, telemetry=tm)
+    # serving-side in-situ declared as a plan, same shape as training
+    if plan is None:
+        plan = default_serve_plan(insitu_mode=insitu_mode)
+    if not isinstance(plan, InSituPlan):
+        plan = InSituPlan.from_dict(plan)
 
     rng = np.random.default_rng(seed)
     requests = [
@@ -54,28 +66,30 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     pending = list(requests)
     step = 0
     t0 = time.perf_counter()
-    while pending or any(a is not None for a in engine.active):
-        while pending and engine.admit(pending[0]):
-            pending.pop(0)
-        if any(a is not None for a in engine.active):
-            with tm.span("step/compute", step=step):
-                engine.step()
-            insitu.submit(step, engine.insitu_providers())
-        step += 1
-        if step > 10000:
-            break
-    insitu.drain()
+    with Session(plan, telemetry=tm, raise_on_error=True) as session:
+        while pending or any(a is not None for a in engine.active):
+            while pending and engine.admit(pending[0]):
+                pending.pop(0)
+            if any(a is not None for a in engine.active):
+                with session.step_span(step):
+                    engine.step()
+                if "kv_pages" in session.streams:
+                    session.emit("kv_pages", step, lambda: engine.cache)
+            step += 1
+            if step > 10000:
+                break
     total = time.perf_counter() - t0
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)
-    rep = tm.step_overlap_report()
+    rep = session.report()
     log(f"served {done}/{len(requests)} requests, {toks} tokens "
         f"in {total:.2f}s ({toks / max(total, 1e-9):.1f} tok/s), "
-        f"insitu results={len(insitu.results)}, "
+        f"insitu results={rep['n_results']}, "
         f"handoff dispatch={rep['handoff_dispatch_s'] * 1e3:.2f}ms "
         f"(materialize {rep['handoff_materialize_s'] * 1e3:.2f}ms overlapped)")
     return {"requests": requests, "telemetry": tm, "steps": step,
-            "insitu_results": len(insitu.results), "tok_per_s": toks / total}
+            "insitu_results": len(session.results),
+            "session_report": rep, "tok_per_s": toks / total}
 
 
 def main() -> None:

@@ -294,15 +294,50 @@ def jit_train_step(cfg, mesh, step_cfg: StepConfig, shape, *, rules=None,
 # end-to-end loop (smoke-scale on CPU; same code path as production)
 # ---------------------------------------------------------------------------
 
+def default_train_plan(*, insitu_mode: str = "async",
+                       ckpt_dir: Optional[str] = None, ckpt_every: int = 20,
+                       analytics_every: int = 10, p_i: int = 2) -> dict:
+    """The training loop's declarative in-situ plan, in plain-dict form.
+
+    Two streams: ``grads`` (per-step gradient/param summaries) and
+    ``train_state`` (the full checkpointable state). Callers can load the
+    same shape from TOML/JSON and pass it to ``train_loop(plan=...)``.
+    """
+    plan: dict = {
+        "streams": ["grads", "train_state"],
+        "workers": p_i,
+        "tasks": {
+            "analytics": {"stream": "grads", "preset": "grad_health",
+                          "every": analytics_every,
+                          "placement": insitu_mode},
+        },
+    }
+    if ckpt_dir:
+        plan["tasks"]["checkpoint"] = {
+            "stream": "train_state", "preset": "checkpoint",
+            "every": ckpt_every, "placement": insitu_mode,
+            "options": {"directory": ckpt_dir},
+        }
+    return plan
+
+
 def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
                insitu_mode: str = "async", ckpt_dir: Optional[str] = None,
                ckpt_every: int = 20, seed: int = 0,
                analytics_every: int = 10, p_i: int = 2,
+               plan: Optional[Any] = None,
                log: Callable[[str], None] = print) -> dict:
-    from repro.checkpoint import CheckpointConfig, CheckpointManager
-    from repro.core import (PipelineRuntime, PipelineTask, Placement,
-                            Telemetry)
-    from repro.core import analysis
+    """End-to-end training with the in-situ stack declared as a plan.
+
+    All in-situ work — analytics and checkpointing — is one
+    :class:`~repro.core.session.InSituPlan` driven through a single
+    :class:`~repro.core.session.Session`; the loop's only in-situ calls are
+    ``session.emit``. Pass ``plan`` (an ``InSituPlan`` or its dict form) to
+    replace the default workflow wholesale; the legacy kwargs
+    (``insitu_mode``/``ckpt_every``/``analytics_every``) parameterize the
+    default plan.
+    """
+    from repro.core import InSituPlan, Session, Telemetry
     from repro.data.pipeline import Prefetcher, batch_spec_for
     from repro.distributed.fault import StragglerMonitor
 
@@ -312,58 +347,55 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
     step_cfg = StepConfig()
     tm = Telemetry()
 
+    if plan is None:
+        plan = default_train_plan(
+            insitu_mode=insitu_mode, ckpt_dir=ckpt_dir,
+            ckpt_every=ckpt_every, analytics_every=analytics_every, p_i=p_i)
+    if not isinstance(plan, InSituPlan):
+        plan = InSituPlan.from_dict(plan)
+
     with sharding.mesh_context(mesh):
         state = init_state(cfg, jax.random.PRNGKey(seed), step_cfg.opt)
         jitted, st_sh, b_sh, _ = jit_train_step(cfg, mesh, step_cfg, shape,
                                                 donate=False)
 
-        # ONE runtime: analytics and checkpointing share the staging ring
+        # ONE session: analytics and checkpointing share the staging ring
         # and the p_i worker pool (the paper's single p_o/p_i split).
-        placement = Placement(insitu_mode)
-        runtime = PipelineRuntime(workers=p_i, telemetry=tm)
-        runtime.register(PipelineTask(
-            "analytics", "grads_summary",
-            sink=lambda s, payload: analysis.gradient_health(payload, s),
-            placement=placement, every=analytics_every))
-        mgr = None
-        if ckpt_dir:
-            mgr = CheckpointManager(
-                CheckpointConfig(ckpt_dir, mode=placement, every=ckpt_every),
-                runtime=runtime)
-            if mgr.latest_step() is not None:
-                start, state = mgr.restore(state)
+        with Session(plan, telemetry=tm, raise_on_error=True) as session:
+            if session.latest_checkpoint_step() is not None:
+                start, state = session.restore(state)
                 log(f"resumed from step {start}")
 
-        pf = Prefetcher(batch_spec_for(cfg, shape), depth=2,
-                        telemetry=tm)
-        mon = StragglerMonitor()
-        losses = []
-        for i in range(steps):
-            batch_np = next(pf)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            t0 = time.perf_counter()
-            with tm.span("step/compute", step=i):
-                state, metrics = jitted(state, batch)
-                loss = float(metrics["loss"])
-            mon.observe(0, time.perf_counter() - t0)
-            losses.append(loss)
-            params_now = state["params"]
-            runtime.submit(i, {
-                "grads_summary": lambda p=params_now: {
-                    "params": np.asarray(
-                        jax.tree.leaves(p)[0].astype(jnp.float32))},
-            })
-            if mgr is not None:
-                mgr.maybe_save(i, state)
-            if i % 10 == 0:
-                log(f"step {i} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
-        pf.close()
-        if mgr is not None:
-            mgr.wait_idle()
-        runtime.drain()
-    n_analytics = sum(1 for r in runtime.results if r.task == "analytics")
+            pf = Prefetcher(batch_spec_for(cfg, shape), depth=2,
+                            telemetry=tm)
+            mon = StragglerMonitor()
+            losses = []
+            for i in range(steps):
+                batch_np = next(pf)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.perf_counter()
+                with session.step_span(i):
+                    state, metrics = jitted(state, batch)
+                    loss = float(metrics["loss"])
+                mon.observe(0, time.perf_counter() - t0)
+                losses.append(loss)
+                # a custom plan may declare only a subset of the default
+                # streams — offer each payload only where declared
+                if "grads" in session.streams:
+                    params_now = state["params"]
+                    session.emit("grads", i, lambda p=params_now: {
+                        "params": np.asarray(
+                            jax.tree.leaves(p)[0].astype(jnp.float32))})
+                if "train_state" in session.streams:
+                    session.emit("train_state", i, lambda s=state: s)
+                if i % 10 == 0:
+                    log(f"step {i} loss {loss:.4f} "
+                        f"lr {float(metrics['lr']):.2e}")
+            pf.close()
+    n_analytics = sum(1 for r in session.results if r.task == "analytics")
     return {"losses": losses, "telemetry": tm,
             "insitu_results": n_analytics,
+            "session_report": session.report(),
             "straggler_report": mon.report()}
 
 

@@ -43,6 +43,20 @@ def test_telemetry_attribution_sync_vs_async():
     assert rep_a["async_overlapped_s"] > 0
 
 
+def test_train_loop_accepts_custom_plan_subset(tmp_path):
+    """plan= replaces the default workflow wholesale — a plan declaring
+    only a subset of the default streams must not crash the loop."""
+    out = train_loop("smollm-135m", steps=3, smoke=True, plan={
+        "streams": ["train_state"],
+        "tasks": {"checkpoint": {
+            "stream": "train_state", "preset": "checkpoint", "every": 2,
+            "options": {"directory": str(tmp_path)}}},
+    })
+    assert len(out["losses"]) == 3
+    assert out["insitu_results"] == 0                 # no analytics declared
+    assert out["session_report"]["checkpoint"]["saves"] == 2  # steps 0, 2
+
+
 def test_serve_loop_completes_requests():
     out = serve_loop("smollm-135m", n_requests=3, max_new=3, slots=2,
                      insitu_mode="async", log=lambda *_: None)

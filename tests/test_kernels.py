@@ -130,6 +130,45 @@ def test_fused_packed_kernel_path_matches_per_leaf_kernels():
         off += c
 
 
+def test_fused_tree_trace_cache_buckets_shapes():
+    """Elastic-mesh contract: leaf resizes that stay inside the same
+    power-of-two block bucket reuse the compiled fused kernel instead of
+    re-tracing (ROADMAP perf candidate), and stay bit-identical to the
+    per-leaf path."""
+    policy = lambda k: True    # noqa: E731 - compress every leaf
+
+    # 6100 elems -> 24 blocks -> bucket 32; 8100 elems -> 32 blocks -> 32.
+    # Without bucketing these are distinct trace keys (24 vs 32 rows).
+    t1 = {"a": jnp.ones(6100, jnp.float32),
+          "b": jnp.ones((40, 40), jnp.float32)}
+    t2 = {"a": jnp.ones(8100, jnp.float32),
+          "b": jnp.ones((41, 40), jnp.float32)}
+    ops.spectral_compress_tree(t1, 1e-2, policy)
+    size_after_first = ops.packed_tree_cache_size()
+    ops.spectral_compress_tree(t2, 1e-2, policy)
+    assert ops.packed_tree_cache_size() == size_after_first, \
+        "same pow2 buckets must not re-trace the fused tree kernel"
+
+    # a genuinely new bucket (crossing a pow2 boundary) does compile
+    t3 = {"a": jnp.ones(20000, jnp.float32),     # 79 blocks -> bucket 128
+          "b": jnp.ones((41, 40), jnp.float32)}
+    ops.spectral_compress_tree(t3, 1e-2, policy)
+    assert ops.packed_tree_cache_size() == size_after_first + 1
+
+    # bucketed fused output stays bit-identical to the per-leaf path
+    rng = np.random.default_rng(11)
+    t4 = {"a": jnp.asarray(rng.standard_normal(6100).astype(np.float32)),
+          "b": jnp.asarray(rng.standard_normal((40, 40))
+                           .astype(np.float32))}
+    fused = ops.spectral_compress_tree(t4, 1e-2, policy, fused=True)
+    plain = ops.spectral_compress_tree(t4, 1e-2, policy, fused=False)
+    for key in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(fused[key].q),
+                                      np.asarray(plain[key].q))
+        np.testing.assert_array_equal(np.asarray(fused[key].scale),
+                                      np.asarray(plain[key].scale))
+
+
 def test_fused_tree_bit_equal_to_per_leaf():
     """Tentpole contract: the single-dispatch fused tree compression is
     bit-identical to the per-leaf path, leaf by leaf."""

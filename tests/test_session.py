@@ -1,0 +1,440 @@
+"""The declarative Session/Plan API: validation, round-trip, triggers,
+error propagation, checkpoint folding, and parity of the legacy shims
+(`InSituEngine`/`run_workflow`/`run_pipeline`) against a `Session` on the
+fig02 (sync-vs-async placement) and fig05 (frequency/backpressure/adapt)
+semantics.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import InSituEngine, InSituMode, InSituTask, run_workflow
+from repro.insitu import (Adaptive, Every, InSituPlan, InSituTaskError,
+                          Interval, Placement, PlanError, Session, TaskSpec,
+                          When, preset_names)
+
+
+# -- plan validation ----------------------------------------------------------
+
+def _plan_dict(**task_over):
+    task = {"stream": "a", "preset": "grad_health", "every": 1}
+    task.update(task_over)
+    return {"streams": ["a"], "tasks": {"t": task}}
+
+
+def test_plan_unknown_stream_names_the_task():
+    with pytest.raises(PlanError, match=r"task 't'.*unknown stream 'b'"):
+        InSituPlan.from_dict(_plan_dict(stream="b"))
+
+
+def test_plan_duplicate_task_name():
+    with pytest.raises(PlanError, match=r"duplicate task 't'"):
+        InSituPlan(streams=["a"],
+                   tasks=[TaskSpec(name="t", stream="a", sink=print),
+                          TaskSpec(name="t", stream="a", sink=print)])
+
+
+def test_plan_duplicate_stream():
+    with pytest.raises(PlanError, match=r"duplicate stream 'a'"):
+        InSituPlan(streams=["a", "a"])
+
+
+def test_plan_every_zero():
+    with pytest.raises(PlanError, match=r"task 't'.*>= 1.*every=0"):
+        InSituPlan.from_dict(_plan_dict(every=0))
+
+
+def test_plan_conflicting_triggers():
+    with pytest.raises(PlanError, match=r"task 't'.*conflicting triggers"):
+        InSituPlan.from_dict(_plan_dict(
+            every=2, trigger={"kind": "interval", "seconds": 1.0}))
+
+
+def test_plan_adaptive_conflicts_with_non_adapt_backpressure():
+    with pytest.raises(PlanError, match=r"task 't'.*conflicting"):
+        InSituPlan(streams=["a"],
+                   tasks=[TaskSpec(name="t", stream="a", sink=print,
+                                   trigger=Adaptive(2),
+                                   backpressure="drop")])
+
+
+def test_plan_unknown_preset_lists_registered():
+    with pytest.raises(PlanError, match=r"unknown preset 'nope'"):
+        InSituPlan.from_dict(_plan_dict(preset="nope"))
+    assert {"checkpoint", "grad_health", "spectra",
+            "serve_snapshot"} <= set(preset_names())
+
+
+def test_plan_checkpoint_requires_directory():
+    with pytest.raises(PlanError, match=r"task 't'.*directory"):
+        InSituPlan.from_dict(_plan_dict(preset="checkpoint"))
+
+
+def test_plan_checkpoint_rejects_unwired_knobs(tmp_path):
+    """The checkpoint preset must not silently ignore declared scheduling
+    knobs the manager doesn't wire through."""
+    opts = {"directory": str(tmp_path)}
+    with pytest.raises(PlanError, match=r"task 't'.*backpressure"):
+        InSituPlan(streams=["a"], tasks=[
+            TaskSpec(name="t", stream="a", preset="checkpoint",
+                     options=opts, backpressure="drop")])
+    with pytest.raises(PlanError, match=r"task 't'.*Adaptive"):
+        InSituPlan(streams=["a"], tasks=[
+            TaskSpec(name="t", stream="a", preset="checkpoint",
+                     options=opts, trigger=Adaptive(2))])
+    with pytest.raises(PlanError, match=r"task 't'.*shards"):
+        InSituPlan(streams=["a"], tasks=[
+            TaskSpec(name="t", stream="a", preset="checkpoint",
+                     options=opts, shards=2)])
+
+
+def test_plan_at_most_one_checkpoint_task(tmp_path):
+    opts = {"directory": str(tmp_path)}
+    with pytest.raises(PlanError, match="at most one"):
+        InSituPlan(streams=["a"], tasks=[
+            TaskSpec(name="c1", stream="a", preset="checkpoint",
+                     options=opts),
+            TaskSpec(name="c2", stream="a", preset="checkpoint",
+                     options=opts)])
+
+
+def test_plan_preset_and_sink_conflict():
+    with pytest.raises(PlanError, match=r"task 't'.*not both"):
+        InSituPlan(streams=["a"],
+                   tasks=[TaskSpec(name="t", stream="a",
+                                   preset="grad_health", sink=print)])
+    with pytest.raises(PlanError, match=r"task 't'.*preset or a sink"):
+        InSituPlan(streams=["a"], tasks=[TaskSpec(name="t", stream="a")])
+
+
+def test_plan_unknown_fields_rejected():
+    with pytest.raises(PlanError, match="unknown plan field"):
+        InSituPlan.from_dict({"streams": [], "typo": 1})
+    with pytest.raises(PlanError, match=r"task 't'.*unknown field"):
+        InSituPlan.from_dict(_plan_dict(typo=1))
+    with pytest.raises(PlanError, match=r"task 't'.*unknown placement"):
+        InSituPlan.from_dict(_plan_dict(placement="warp"))
+
+
+# -- dict round-trip ----------------------------------------------------------
+
+def test_plan_dict_round_trip(tmp_path):
+    d = {
+        "streams": ["grads", "train_state"],
+        "workers": 3,
+        "staging_capacity": 2,
+        "tasks": {
+            "gh": {"stream": "grads", "preset": "grad_health", "every": 10,
+                   "placement": "sync"},
+            "spec": {"stream": "grads", "preset": "spectra",
+                     "trigger": {"kind": "adaptive", "n": 4,
+                                 "max_every": 32, "after": 3},
+                     "options": {"work": 2}},
+            "ckpt": {"stream": "train_state", "preset": "checkpoint",
+                     "every": 50, "placement": "hybrid",
+                     "options": {"directory": str(tmp_path)}},
+        },
+    }
+    plan = InSituPlan.from_dict(d)
+    d2 = plan.to_dict()
+    # a second round-trip is a fixed point
+    assert InSituPlan.from_dict(d2).to_dict() == d2
+    plan2 = InSituPlan.from_dict(d2)
+    assert [t.name for t in plan2.tasks] == ["gh", "spec", "ckpt"]
+    assert plan2.tasks[0].trigger == Every(10)
+    assert plan2.tasks[0].placement is Placement.SYNC
+    assert plan2.tasks[1].trigger == Adaptive(4, max_every=32, after=3)
+    assert plan2.workers == 3 and plan2.staging_capacity == 2
+
+
+def test_plan_list_form_tasks():
+    plan = InSituPlan.from_dict({
+        "streams": ["a"],
+        "tasks": [{"name": "t", "stream": "a", "preset": "grad_health"}]})
+    assert plan.tasks[0].name == "t"
+
+
+def test_callable_tasks_do_not_serialize():
+    plan = InSituPlan(streams=["a"],
+                      tasks=[TaskSpec(name="t", stream="a", sink=print)])
+    with pytest.raises(PlanError, match="code"):
+        plan.to_dict()
+    with pytest.raises(PlanError, match="code"):
+        TaskSpec(name="t", stream="a", sink=print,
+                 trigger=When(lambda s: True)).to_dict()
+
+
+# -- session basics -----------------------------------------------------------
+
+def _collect_plan(trigger=Every(1), **kw):
+    hits = []
+
+    def sink(step, payload):
+        hits.append((step, payload))
+        return step
+
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="t", stream="x", trigger=trigger,
+                        placement=kw.pop("placement", Placement.SYNC),
+                        sink=sink, **kw)],
+        workers=2)
+    return plan, hits
+
+
+def test_emit_unknown_stream_raises():
+    plan, _ = _collect_plan()
+    with Session(plan) as s:
+        with pytest.raises(PlanError, match=r"unknown stream 'y'"):
+            s.emit("y", 0, 1)
+
+
+def test_every_trigger_and_lazy_provider():
+    plan, hits = _collect_plan(trigger=Every(3))
+    calls = []
+    with Session(plan) as s:
+        for i in range(9):
+            s.emit("x", i, lambda i=i: calls.append(i) or i)
+    assert [h[0] for h in hits] == [0, 3, 6]
+    assert calls == [0, 3, 6]        # provider only evaluated on firings
+
+
+def test_when_trigger():
+    plan, hits = _collect_plan(trigger=When(lambda s: s in (2, 5)))
+    with Session(plan) as s:
+        for i in range(7):
+            s.emit("x", i, i)
+    assert [h[0] for h in hits] == [2, 5]
+
+
+def test_interval_trigger_fires_by_wall_clock():
+    plan, hits = _collect_plan(trigger=Interval(0.08))
+    with Session(plan) as s:
+        for i in range(6):
+            s.emit("x", i, i)
+            time.sleep(0.03)
+    steps = [h[0] for h in hits]
+    assert steps[0] == 0                      # first emit always fires
+    assert 2 <= len(steps) < 6                # rate-limited, not per-step
+
+
+def test_provider_evaluated_once_for_multiple_tasks_on_one_stream():
+    hits = []
+
+    def sink(step, payload):
+        hits.append(payload)
+        return payload
+
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="a", stream="x", sink=sink,
+                        placement=Placement.SYNC),
+               TaskSpec(name="b", stream="x", sink=sink,
+                        placement=Placement.SYNC)])
+    calls = []
+    with Session(plan) as s:
+        s.emit("x", 0, lambda: calls.append(0) or 7)
+    assert hits == [7, 7]          # both tasks fired ...
+    assert calls == [0]            # ... off ONE payload materialization
+
+
+def test_session_streams_property():
+    plan, _ = _collect_plan()
+    with Session(plan) as s:
+        assert s.streams == frozenset({"x"})
+
+
+def test_non_callable_payload_is_passed_through():
+    plan, hits = _collect_plan()
+    with Session(plan) as s:
+        s.emit("x", 0, {"a": 1})
+    assert hits == [(0, {"a": 1})]
+
+
+# -- error propagation --------------------------------------------------------
+
+def test_finish_raises_with_context():
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="boom", stream="x",
+                        sink=lambda s, p: 1 / 0,
+                        placement=Placement.ASYNC)])
+    s = Session(plan)
+    s.emit("x", 4, 1)
+    with pytest.raises(InSituTaskError) as ei:
+        s.finish(raise_on_error=True)
+    e = ei.value
+    assert (e.task, e.stream, e.step) == ("boom", "x", 4)
+    assert "step 4" in str(e) and "ZeroDivisionError" in str(e)
+    assert isinstance(e.__cause__, ZeroDivisionError)
+    # errors stay inspectable too
+    assert len(s.errors()) == 1
+
+
+def test_session_default_raise_on_error_via_context_manager():
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="boom", stream="x",
+                        sink=lambda s, p: 1 / 0)])
+    with pytest.raises(InSituTaskError):
+        with Session(plan, raise_on_error=True) as s:
+            s.emit("x", 0, 1)
+
+
+def test_app_exception_not_masked_by_task_error():
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="boom", stream="x",
+                        sink=lambda s, p: 1 / 0)])
+    with pytest.raises(KeyError, match="app-bug"):
+        with Session(plan, raise_on_error=True) as s:
+            s.emit("x", 0, 1)
+            raise KeyError("app-bug")
+
+
+def test_finish_idempotent():
+    plan, hits = _collect_plan()
+    s = Session(plan)
+    s.emit("x", 0, 1)
+    s.finish()
+    s.finish()
+    assert len(hits) == 1
+
+
+# -- checkpoint folded into the session ---------------------------------------
+
+def test_checkpoint_task_saves_restores_and_reports(tmp_path):
+    state = {"w": jnp.arange(512, dtype=jnp.float32),
+             "mu": jnp.ones((32, 16), jnp.float32)}
+    plan = InSituPlan.from_dict({
+        "streams": ["train_state"],
+        "tasks": {"checkpoint": {
+            "stream": "train_state", "preset": "checkpoint", "every": 4,
+            "options": {"directory": str(tmp_path), "keep": 2}}},
+    })
+    with Session(plan, raise_on_error=True) as s:
+        for i in range(10):
+            s.emit("train_state", i, lambda: state)
+    rep = s.report()
+    assert rep["checkpoint"]["saves"] == 3            # steps 0, 4, 8
+    assert rep["checkpoint"]["last_step"] == 8
+    assert rep["checkpoint"]["kept_steps"] == [4, 8]  # retention keep=2
+    assert rep["tasks"]["checkpoint"]["results"] == 3
+    step, restored = s.restore(state)
+    assert step == 8
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_restore_without_checkpoint_task_raises():
+    plan, _ = _collect_plan()
+    with Session(plan) as s:
+        pass
+    with pytest.raises(PlanError, match="no checkpoint task"):
+        s.restore({"w": jnp.zeros(4)})
+
+
+# -- legacy-shim parity (fig02 / fig05 semantics) -----------------------------
+
+def _device_step(step_s):
+    def app_step(i):
+        time.sleep(step_s)
+        return {"x": lambda: np.zeros(64, np.float32)}
+    return app_step
+
+
+def _session_run(placement, *, n, step_s, every=1, task_s=0.0, p_i=2,
+                 cap=4, backpressure=None, trigger=None):
+    def work(step, payload):
+        if task_s:
+            time.sleep(task_s)
+        return ("done", step)
+
+    plan = InSituPlan(
+        streams=["x"],
+        tasks=[TaskSpec(name="t", stream="x", sink=work,
+                        trigger=trigger or Every(every),
+                        placement=placement, backpressure=backpressure)],
+        workers=p_i, staging_capacity=cap)
+    session = Session(plan)
+    session.run(n, _device_step(step_s))
+    return session
+
+
+def _engine_run(mode, *, n, step_s, every=1, task_s=0.0, p_i=2, cap=4):
+    def work(step, payload):
+        if task_s:
+            time.sleep(task_s)
+        return ("done", step)
+
+    eng = InSituEngine(
+        [InSituTask("t", "x", work, mode=mode, every=every)],
+        p_i=p_i, staging_capacity=cap)
+    run_workflow(n, _device_step(step_s), eng)
+    return eng
+
+
+def test_parity_sync_placement_fig02():
+    """fig02's sync semantics: the task runs on the loop thread, loop time
+    includes it — identical through the shim and the Session."""
+    sess = _session_run(Placement.SYNC, n=6, step_s=0.005)
+    eng = _engine_run(InSituMode.SYNC, n=6, step_s=0.005)
+    main = threading.main_thread().name
+    assert len(sess.results) == len(eng.results) == 6
+    assert all(r.worker == main for r in sess.results)
+    assert all(r.worker == main for r in eng.results)
+    for obj in (sess.telemetry, eng.telemetry):
+        assert obj.total("insitu-sync/") > 0
+        assert obj.total("insitu-async/") == 0
+
+
+def test_parity_async_placement_fig02():
+    """fig02's async semantics: workers consume, loop only pays hand-off."""
+    sess = _session_run(Placement.ASYNC, n=6, step_s=0.02, task_s=0.02)
+    eng = _engine_run(InSituMode.ASYNC, n=6, step_s=0.02, task_s=0.02)
+    assert len(sess.results) == len(eng.results) == 6
+    assert all(r.worker.startswith("insitu-") for r in sess.results)
+    assert all(r.worker.startswith("insitu-") for r in eng.results)
+    assert sess.telemetry.total("insitu-sync/") == 0
+
+
+def test_parity_every_n_fig05():
+    sess = _session_run(Placement.ASYNC, n=9, step_s=0.0, every=3)
+    eng = _engine_run(InSituMode.ASYNC, n=9, step_s=0.0, every=3)
+    assert sorted(r.step for r in sess.results) == [0, 3, 6]
+    assert sorted(r.step for r in eng.results) == [0, 3, 6]
+
+
+def test_parity_backpressure_fig05():
+    """fig05's F3 regime: ring of 1, slow consumer — the producer visibly
+    backpressures through both entry points."""
+    sess = _session_run(Placement.ASYNC, n=8, step_s=0.001, task_s=0.05,
+                        p_i=1, cap=1)
+    eng = _engine_run(InSituMode.ASYNC, n=8, step_s=0.001, task_s=0.05,
+                      p_i=1, cap=1)
+    assert sess.telemetry.total("staging/wait") > 0
+    assert eng.telemetry.total("staging/wait") > 0
+    assert len(sess.results) == len(eng.results) == 8
+
+
+def test_adaptive_trigger_widens_effective_every_fig05():
+    """fig05's adapt row: under sustained pressure the runtime lengthens
+    the effective firing period instead of stalling forever."""
+    sess = _session_run(Placement.ASYNC, n=24, step_s=0.001, task_s=0.03,
+                        p_i=1, cap=1, trigger=Adaptive(1, after=2))
+    rep = sess.report()
+    assert rep["effective_every"]["t"] > 1
+
+
+def test_engine_report_matches_session_report_keys():
+    """The shim's report IS a session report (one merged dict)."""
+    eng = _engine_run(InSituMode.ASYNC, n=4, step_s=0.002)
+    rep = eng.report()
+    for key in ("step_compute_s", "handoff_s", "n_results", "tasks",
+                "errors", "effective_every"):
+        assert key in rep
+    assert rep["n_results"] == 4
+    assert rep["tasks"]["t"]["stream"] == "x"
