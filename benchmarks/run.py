@@ -27,7 +27,8 @@ def main() -> None:
                             fig07_sync_compression, fig08_hybrid_compression,
                             fig09_compression_scaling,
                             fig10_12_qe_checkpoint, handoff_overlap,
-                            lossy_ratio, roofline, tab2_codecs)
+                            lossy_ratio, roofline, snapshot_delta,
+                            tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -44,6 +45,7 @@ def main() -> None:
         ("roofline", roofline.run),
         ("runtime", handoff_overlap.run),
         ("checkpoint_io", checkpoint_io.run),
+        ("snapshot_delta", snapshot_delta.run),
     ]
     print("name,us_per_call,derived")
     failures = []
@@ -59,17 +61,19 @@ def main() -> None:
             failures.append((name, e))
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
-    if (not quick and "runtime" in results and "checkpoint_io" in results):
+    tracked = ("runtime", "checkpoint_io", "snapshot_delta")
+    if not quick and all(name in results for name in tracked):
         # only an unfiltered --full run refreshes the tracked perf artifact
         # (quick-mode numbers are not comparable across PRs, and a --only
-        # subset would silently drop the other bench's tracked section)
+        # subset would silently drop another bench's tracked section)
         artifact = dict(results["runtime"])
         artifact["checkpoint_io"] = results["checkpoint_io"]
+        artifact["snapshot_delta"] = results["snapshot_delta"]
         handoff_overlap.write_artifact(artifact)
         print(f"# wrote {handoff_overlap.ARTIFACT}")
     elif not quick and args.only:
         print(f"# --only filter active: {handoff_overlap.ARTIFACT} "
-              "not refreshed (needs both runtime and checkpoint_io)")
+              f"not refreshed (needs {', '.join(tracked)})")
     if failures:
         sys.exit(f"{len(failures)} benchmarks failed")
 

@@ -1,0 +1,180 @@
+"""Serving snapshots: delta-encoded base+delta chain vs full-slab zlib.
+
+The serving loop's KV slab is append-mostly: between two snapshot firings a
+handful of slots gain a few freshly decoded tokens each and everything else
+is byte-identical. The pre-delta ``serve_snapshot`` path paid full lossless
+compression of the slab on *every* firing; the versioned
+:class:`~repro.serving.snapshot.SnapshotStore` pays it only on base frames
+(every ``base_every``-th publish) and ships per-chunk XOR/COPY deltas in
+between — Huebl et al.'s point that the *reduction ratio*, not bandwidth,
+is the binding constraint at scale.
+
+This benchmark drives an append-mostly decode workload (a warm slab; each
+firing appends a few tokens to the active slots, with slot turnover) and
+measures, over the same sequence of snapshots:
+
+  * the **effective compression ratio** (total raw bytes / total stored
+    bytes) of the delta chain vs compressing the full slab with plain zlib
+    each firing — the acceptance gate is delta >= 2x zlib (full mode;
+    quick mode gates >= 1x),
+  * publish latency (us per firing) for both paths,
+  * **bit-identical restore** through the base+delta chain: the newest
+    snapshot and a mid-chain prefix both replay exactly, from a *fresh*
+    store instance reading the on-disk frames.
+
+The metrics dict lands in ``BENCH_runtime.json`` under ``snapshot_delta``
+on ``--full`` runs of ``benchmarks.run``. CI smoke-runs quick mode.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import codecs
+from repro.serving.snapshot import SnapshotStore
+
+
+def _warm_slab(slots: int, tokens: int, width: int,
+               fill: float, seed: int = 0) -> dict[str, np.ndarray]:
+    """A warm serving slab: ``fill`` of each slot's token rows hold data
+    (turbulence-flavoured, compressible like real activations), the rest
+    are zeros — the unwritten tail of each page."""
+    out = {}
+    for name in ("k", "v"):
+        arr = np.zeros((slots, tokens, width), np.float32)
+        filled = int(tokens * fill)
+        data = common.turbulence_field(slots * filled * width,
+                                       seed=seed + (name == "v"))
+        arr[:, :filled, :] = data.reshape(slots, filled, width)
+        out[name] = arr
+    return out
+
+
+def _append_step(slab: dict[str, np.ndarray], lengths: np.ndarray,
+                 active: np.ndarray, new_tokens: int, rng) -> None:
+    """One firing's worth of decode mutation: the active slots append
+    ``new_tokens`` rows each; a slot that fills up is re-admitted (its page
+    resets — the worst case for the delta, a whole page rewrite)."""
+    slots, tokens, width = slab["k"].shape
+    for s in np.flatnonzero(active):
+        if lengths[s] + new_tokens > tokens:
+            for name in ("k", "v"):
+                slab[name][s] = 0.0
+                slab[name][s, :tokens // 2] = common.turbulence_field(
+                    (tokens // 2) * width,
+                    seed=int(rng.integers(1 << 30))).reshape(-1, width)
+            lengths[s] = tokens // 2
+            continue
+        for name in ("k", "v"):
+            slab[name][s, lengths[s]:lengths[s] + new_tokens] = (
+                common.turbulence_field(
+                    new_tokens * width,
+                    seed=int(rng.integers(1 << 30))).reshape(-1, width))
+        lengths[s] += new_tokens
+
+
+def run(quick: bool = True) -> dict:
+    slots, width = 8, (64 if quick else 128)
+    tokens = 1024 if quick else 4096
+    n_firings = 12 if quick else 24
+    base_every = 4 if quick else 8
+    new_tokens = 16
+    rng = np.random.default_rng(0)
+
+    slab = _warm_slab(slots, tokens, width, fill=0.5)
+    lengths = np.full((slots,), tokens // 2, np.int64)
+    raw_mb = sum(a.nbytes for a in slab.values()) / 1e6
+
+    mid = n_firings // 2
+    mid_snapshot = None
+    delta_s = zlib_s = 0.0
+    zlib_stored = 0
+    with tempfile.TemporaryDirectory() as d:
+        store = SnapshotStore(d, base_every=base_every)
+        for i in range(n_firings):
+            active = rng.random(slots) < 0.5
+            _append_step(slab, lengths, active, new_tokens, rng)
+
+            t0 = time.perf_counter()
+            store.publish("kv_pages", i, slab)
+            delta_s += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            for arr in slab.values():
+                blob, _ = codecs.encode(arr, "zlib",
+                                        pool=codecs.codec_pool())
+                zlib_stored += len(blob)
+            zlib_s += time.perf_counter() - t0
+
+            if i == mid:
+                mid_snapshot = {k: a.copy() for k, a in slab.items()}
+
+        st = store.stats("kv_pages")
+        # restore through the chain from a FRESH store over the same dir:
+        # newest snapshot and a published mid-chain prefix, bit-identical
+        reader = SnapshotStore(d, base_every=base_every)
+        _, restored = reader.restore("kv_pages", template=slab)
+        for key, arr in slab.items():
+            np.testing.assert_array_equal(restored[key], arr)
+        _, restored_mid = reader.restore("kv_pages", upto=mid,
+                                         template=slab)
+        for key, arr in mid_snapshot.items():
+            np.testing.assert_array_equal(restored_mid[key], arr)
+
+    raw_total = st["raw_bytes"]
+    delta_x = st["effective_compression_x"]
+    zlib_x = raw_total / zlib_stored
+    win = delta_x / zlib_x
+
+    common.row("snapshot/delta/publish", delta_s / n_firings * 1e6,
+               f"measured;{delta_x:.1f}x;chain_depth={st['chain_depth']}")
+    common.row("snapshot/zlib_full/publish", zlib_s / n_firings * 1e6,
+               f"measured;{zlib_x:.1f}x")
+    common.row("snapshot/delta_over_zlib_ratio", 0.0, f"{win:.2f}x")
+
+    # acceptance: the delta chain's effective ratio must beat compressing
+    # the full slab every firing — by >= 2x on the full workload (the
+    # tracked number), and never lose even in the small quick/CI config
+    floor = 1.0 if quick else 2.0
+    assert win >= floor, (
+        f"delta effective ratio only {win:.2f}x plain zlib "
+        f"(want >= {floor}x): delta {delta_x:.2f}x vs zlib {zlib_x:.2f}x")
+
+    return {
+        "slab_mb": raw_mb,
+        "n_firings": n_firings,
+        "base_every": base_every,
+        "delta_effective_x": delta_x,
+        "zlib_effective_x": zlib_x,
+        "delta_over_zlib": win,
+        "delta_publish_us": delta_s / n_firings * 1e6,
+        "zlib_publish_us": zlib_s / n_firings * 1e6,
+        "stored_bytes_delta": st["stored_bytes"],
+        "stored_bytes_zlib": zlib_stored,
+        "frames": {"bases": st["bases"], "deltas": st["deltas"],
+                   "noops": st["noops"]},
+        "quick": quick,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write the metrics dict as JSON to this path")
+    args = ap.parse_args()
+    m = run(quick=not args.full)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(m, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {os.path.abspath(args.out)}")

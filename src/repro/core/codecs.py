@@ -129,7 +129,21 @@ class CompressionStats:
 
 
 def _dtype_token(dtype: np.dtype) -> bytes:
-    return np.dtype(dtype).str.encode()
+    """Self-describing dtype token. Extension dtypes (ml_dtypes bfloat16)
+    have a void ``.str`` ('<V2' — not invertible), so they are recorded by
+    name instead; the delta framing shares these helpers."""
+    dt = np.dtype(dtype)
+    if dt.kind == "V" and dt.names is None:
+        return dt.name.encode()
+    return dt.str.encode()
+
+
+def _dtype_from_token(token: str) -> np.dtype:
+    try:
+        return np.dtype(token)
+    except TypeError:
+        import ml_dtypes  # noqa: F401  registers bfloat16 et al. by name
+        return np.dtype(token)
 
 
 def _byte_view(arr: np.ndarray) -> memoryview:
@@ -193,7 +207,7 @@ def decode(blob: bytes, *,
     view = memoryview(blob)
     version, cid, dtlen = struct.unpack_from("<BBB", blob, 4)
     off = 7
-    dtype = np.dtype(bytes(view[off:off + dtlen]).decode())
+    dtype = _dtype_from_token(bytes(view[off:off + dtlen]).decode())
     off += dtlen
     (ndim,) = struct.unpack_from("<B", blob, off)
     off += 1

@@ -41,7 +41,7 @@ _REGISTRY: dict[str, Codec] = {}
 
 # modules that register codecs at import time (kept lazy: importing the
 # registry must not drag in jax/kernels until a codec is actually needed)
-_PROVIDERS = ("repro.core.codecs", "repro.core.lossy",
+_PROVIDERS = ("repro.core.codecs", "repro.core.delta", "repro.core.lossy",
               "repro.optim.grad_compress")
 _providers_loaded = False
 

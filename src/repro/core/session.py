@@ -131,7 +131,9 @@ class When:
 class Interval:
     """Fire at most once per ``seconds`` of wall clock (first emit always
     fires) — the "checkpoint every 10 minutes" cadence, step-rate
-    independent."""
+    independent. Reads the session's monotonic clock (``Session(...,
+    clock=...)``), so trigger semantics are testable without sleeping;
+    ``Every``/``Adaptive`` are step-counted and never consult it."""
     seconds: float
 
     def to_dict(self) -> dict:
@@ -283,8 +285,10 @@ def register_preset(name: str):
 
     The decorated factory takes the :class:`TaskSpec` and returns the chain
     pieces (``sink`` required; ``host_stages``/``device_stage``/``handoff``
-    optional). Presets keep plans declarative: a dict plan can name them
-    without shipping code.
+    optional; a ``report`` zero-arg callable is merged into the task's
+    entry of :meth:`Session.report`; a ``store`` object is exposed through
+    :meth:`Session.snapshot_store`). Presets keep plans declarative: a dict
+    plan can name them without shipping code.
     """
     def deco(factory: Callable[[TaskSpec], dict]):
         _PRESETS[name] = factory
@@ -325,23 +329,52 @@ def _spectra_preset(spec: TaskSpec) -> dict:
 
 @register_preset("serve_snapshot")
 def _serve_snapshot_preset(spec: TaskSpec) -> dict:
-    """Compressed serving-state snapshot probe: losslessly compresses a
-    sample of the KV slab and reports the achieved ratio. Options:
-    ``codec`` (default 'zlib'), ``sample_elems`` (default 65536)."""
-    import jax
-    import numpy as np
+    """Delta-encoded serving-state snapshots through a versioned
+    :class:`~repro.serving.snapshot.SnapshotStore`.
 
-    from repro.core import compression
-    codec = str(spec.options.get("codec", "zlib"))
-    sample = int(spec.options.get("sample_elems", 65536))
+    Each firing publishes the payload as one frame of the stream's
+    base+delta chain: every ``base_every``-th publish is a self-contained
+    base, the rest are per-chunk XOR/COPY deltas against the previous
+    snapshot, and a payload carrying an unchanged ``version`` hint (see
+    ``ServingEngine.snapshot_payload``) short-circuits to a no-op frame.
+    The sink result is the :class:`~repro.serving.snapshot.SnapshotRecord`
+    for the frame; :meth:`Session.report` merges the store's delta-ratio /
+    chain-depth statistics into the task's entry.
+
+    Options: ``codec`` (inner lossless codec, default 'zlib'),
+    ``base_every`` (chain cadence, default 8), ``directory`` (persist
+    frames crash-safely on disk; default in-memory), ``keep_chains``
+    (retention — default 2, bounding a long-running serving loop's
+    frame accumulation; None keeps everything)."""
+    from repro.serving.snapshot import SnapshotStore
+
+    known = {"codec", "base_every", "directory", "keep_chains"}
+    unknown = set(spec.options) - known
+    if unknown:
+        # a silently-ignored option (e.g. the removed sample_elems of the
+        # pre-delta probe) would change semantics without a diagnostic
+        raise PlanError(
+            f"task {spec.name!r}: unknown serve_snapshot option(s) "
+            f"{sorted(unknown)} (known: {sorted(known)})")
+    keep = spec.options.get("keep_chains", 2)
+    store = SnapshotStore(
+        spec.options.get("directory"),
+        base_every=int(spec.options.get("base_every", 8)),
+        codec=str(spec.options.get("codec", "zlib")),
+        keep_chains=None if keep is None else int(keep))
+    stream = spec.stream
 
     def sink(step: int, payload: Any):
-        flat = jax.tree_util.tree_flatten(payload)[0]
-        arr = np.asarray(flat[0]).ravel()[:sample]
-        blob = compression.get(codec).encode(arr)
-        return (arr.nbytes - len(blob)) / max(arr.nbytes, 1)
+        version = None
+        tree = payload
+        if (isinstance(payload, Mapping) and "cache" in payload
+                and "version" in payload):
+            version = int(payload["version"])
+            tree = payload["cache"]
+        return store.publish(stream, step, tree, version=version)
 
-    return {"sink": sink}
+    return {"sink": sink, "report": lambda: store.stats(stream),
+            "store": store}
 
 
 # ---------------------------------------------------------------------------
@@ -560,10 +593,15 @@ class Session:
     def __init__(self, plan: Union[InSituPlan, Mapping[str, Any]], *,
                  telemetry: Optional[Telemetry] = None,
                  runtime: Optional[PipelineRuntime] = None,
-                 raise_on_error: bool = False) -> None:
+                 raise_on_error: bool = False,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         if isinstance(plan, Mapping):
             plan = InSituPlan.from_dict(plan)
         self.plan = plan
+        # the injected monotonic clock gates wall-clock (Interval) triggers;
+        # tests drive it by hand instead of sleeping (Every/Adaptive are
+        # step-counted and never read it)
+        self._clock = clock if clock is not None else time.monotonic
         self._owns_runtime = runtime is None
         if runtime is None:
             runtime = PipelineRuntime(
@@ -578,6 +616,8 @@ class Session:
         self._finished = False
         self._strict_streams = True       # legacy wrappers relax this
         self._task_stream: dict[str, str] = {}
+        self._reporters: dict[str, Callable[[], Mapping[str, Any]]] = {}
+        self._stores: dict[str, Any] = {}
         self._by_stream: dict[str, list[_Binding]] = {
             s.name: [] for s in plan.streams}
         for spec in plan.tasks:
@@ -596,6 +636,10 @@ class Session:
             pieces = {"sink": spec.sink, "host_stages": spec.host_stages,
                       "device_stage": spec.device_stage,
                       "handoff": spec.handoff}
+        if pieces.get("report") is not None:
+            self._reporters[spec.name] = pieces["report"]
+        if pieces.get("store") is not None:
+            self._stores[spec.name] = pieces["store"]
         session_gated = isinstance(spec.trigger, (When, Interval))
         every = (spec.trigger.n
                  if isinstance(spec.trigger, (Every, Adaptive)) else 1)
@@ -662,7 +706,7 @@ class Session:
             raise PlanError(
                 f"emit on unknown stream {stream!r} (declared: "
                 f"{sorted(self._by_stream)})")
-        now = time.monotonic()
+        now = self._clock()
         providers: dict[str, Callable[[], Any]] = {}
         for b in bindings:
             if b.session_gated and not b.due(step, now):
@@ -724,6 +768,15 @@ class Session:
     def errors(self) -> list[tuple[str, int, BaseException]]:
         """Captured task failures as (task, step, exception)."""
         return list(self.runtime.errors)
+
+    def snapshot_store(self, task: str) -> Any:
+        """The SnapshotStore behind a ``serve_snapshot`` task (for restore
+        / chain inspection); raises ``PlanError`` for other tasks."""
+        if task not in self._stores:
+            raise PlanError(
+                f"task {task!r} has no snapshot store (declared stores: "
+                f"{sorted(self._stores)})")
+        return self._stores[task]
 
     def stream_of(self, task: str) -> Optional[str]:
         """The stream a task is bound to (None for tasks the plan doesn't
@@ -802,6 +855,11 @@ class Session:
                      "errors": sum(1 for (n, _, _) in self.runtime.errors
                                    if n == _runtime_name(t))}
             for t in self.plan.tasks}
+        for name, reporter in self._reporters.items():
+            # preset-contributed stats (e.g. serve_snapshot's delta ratio
+            # and chain depth) ride the task's entry
+            if name in rep["tasks"]:
+                rep["tasks"][name].update(dict(reporter()))
         rep["errors"] = [
             {"task": n, "stream": self.stream_of(n) or "?", "step": s,
              "error": f"{type(e).__name__}: {e}"}

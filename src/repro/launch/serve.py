@@ -3,8 +3,10 @@
 Runs the ServingEngine on a smoke config (CPU) or lowers the full-config
 decode step for the production mesh (see dryrun.py for the mesh pass). The
 in-situ engine attaches the paper's tasks to the *serving* loop: per-step KV
-cache statistics (the "image") and periodic compressed serving-state
-snapshots (prefix-cache persistence — the serving analog of checkpointing).
+cache statistics (the "image") and periodic serving-state snapshots
+(prefix-cache persistence — the serving analog of checkpointing), published
+as a base+delta chain through the versioned ``SnapshotStore`` (the slab is
+append-mostly, so deltas push the effective ratio far past plain zlib).
 """
 from __future__ import annotations
 
@@ -23,13 +25,24 @@ from repro.serving.engine import Request, ServingEngine
 
 
 def default_serve_plan(*, insitu_mode: str = "async",
-                       snapshot_every: int = 4, p_i: int = 2) -> dict:
+                       snapshot_every: int = 4, base_every: int = 8,
+                       codec: str = "zlib",
+                       snapshot_dir: Optional[str] = None,
+                       p_i: int = 2) -> dict:
     """The serving loop's declarative in-situ plan (plain-dict form).
 
     One stream — ``kv_pages``, the live KV cache slab — with the
     ``serve_snapshot`` preset attached best-effort: drop on a full ring,
-    never stall the decode loop.
+    never stall the decode loop. Snapshots go through the versioned
+    delta store: every ``base_every``-th publish is a self-contained base
+    frame, the rest delta-encode against the previous snapshot (the slab
+    is append-mostly), and firings where the engine version is unchanged
+    collapse to a no-op frame. ``snapshot_dir`` persists the chain
+    crash-safely on disk (default: in-memory probe).
     """
+    options: dict = {"base_every": base_every, "codec": codec}
+    if snapshot_dir is not None:
+        options["directory"] = snapshot_dir
     return {
         "streams": ["kv_pages"],
         "workers": p_i,
@@ -37,7 +50,8 @@ def default_serve_plan(*, insitu_mode: str = "async",
             "kv_snapshot": {"stream": "kv_pages", "preset": "serve_snapshot",
                             "every": snapshot_every,
                             "placement": insitu_mode,
-                            "backpressure": "drop"},
+                            "backpressure": "drop",
+                            "options": options},
         },
     }
 
@@ -74,7 +88,8 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                 with session.step_span(step):
                     engine.step()
                 if "kv_pages" in session.streams:
-                    session.emit("kv_pages", step, lambda: engine.cache)
+                    session.emit("kv_pages", step,
+                                 lambda: engine.snapshot_payload())
             step += 1
             if step > 10000:
                 break
@@ -82,6 +97,13 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)
     rep = session.report()
+    snap = rep["tasks"].get("kv_snapshot", {})
+    if snap.get("publishes"):
+        log(f"snapshots: {snap['publishes']} published "
+            f"({snap['bases']} base / {snap['deltas']} delta / "
+            f"{snap['noops']} noop), "
+            f"effective compression {snap['effective_compression_x']:.1f}x, "
+            f"chain depth {snap['chain_depth']}")
     log(f"served {done}/{len(requests)} requests, {toks} tokens "
         f"in {total:.2f}s ({toks / max(total, 1e-9):.1f} tok/s), "
         f"insitu results={rep['n_results']}, "
@@ -100,9 +122,16 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--insitu", default="async",
                     choices=["sync", "async", "hybrid"])
+    ap.add_argument("--snapshot-base-every", type=int, default=8,
+                    help="full base frame every N snapshot publishes")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist the snapshot chain to this directory")
     args = ap.parse_args()
+    plan = default_serve_plan(insitu_mode=args.insitu,
+                              base_every=args.snapshot_base_every,
+                              snapshot_dir=args.snapshot_dir)
     serve_loop(args.arch, n_requests=args.requests, max_new=args.max_new,
-               insitu_mode=args.insitu)
+               insitu_mode=args.insitu, plan=plan)
 
 
 if __name__ == "__main__":

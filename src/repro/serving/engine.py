@@ -446,6 +446,12 @@ class ServingEngine:
         self._decode = jax.jit(make_decode(cfg))
         self._prefill_one = jax.jit(make_prefill(cfg, max_len,
                                                  last_only=True))
+        # page-dirty hint for the snapshot store: every cache mutation
+        # (admit prefill, decode step) bumps the version. An idle engine's
+        # version is stable, so an unchanged snapshot firing
+        # short-circuits to a no-op frame; finer per-page change
+        # detection is the delta codec's per-chunk COPY op.
+        self._state_version = 0
 
     def admit(self, req: Request) -> bool:
         for i, a in enumerate(self.active):
@@ -463,6 +469,7 @@ class ServingEngine:
                 nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
                 self.tokens = self.tokens.at[i, 0].set(nxt)
                 req.out.append(int(nxt))
+                self._state_version += 1
                 return True
         return False
 
@@ -471,6 +478,7 @@ class ServingEngine:
             self.params, self.cache, self.tokens, self.lengths)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.tokens = nxt[:, None]
+        self._state_version += 1
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -480,9 +488,24 @@ class ServingEngine:
                 self.active[i] = None
                 self.lengths = self.lengths.at[i].set(0)
 
+    @property
+    def state_version(self) -> int:
+        """Monotonic cache-mutation counter (bumps on admit and decode)."""
+        return self._state_version
+
+    def snapshot_payload(self) -> dict[str, Any]:
+        """The serve_snapshot payload: the KV slab plus its version hint.
+
+        The hint lets an unchanged firing (idle engine between snapshot
+        periods) short-circuit to a no-op frame in the snapshot store
+        without touching the slab.
+        """
+        return {"cache": self.cache, "version": self._state_version}
+
     def insitu_providers(self) -> dict[str, Callable[[], Any]]:
         return {"serving_state": lambda: self.cache,
-                "lengths": lambda: self.lengths}
+                "lengths": lambda: self.lengths,
+                "kv_snapshot": lambda: self.snapshot_payload()}
 
     def run(self, requests: list[Request], max_steps: int = 512) -> None:
         pending = list(requests)

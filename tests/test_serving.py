@@ -80,6 +80,29 @@ def test_mla_cache_is_compressed():
     assert mla_bytes < naive / 30   # >30x reduction
 
 
+def test_engine_state_version_tracks_cache_mutation():
+    """The snapshot store's no-op shortcut relies on the version hint
+    moving exactly when the cache does."""
+    cfg = base.get("smollm-135m", smoke=True)
+    prm = P.materialize(jax.random.PRNGKey(0), transformer.param_spec(cfg))
+    eng = E.ServingEngine(cfg, prm, slots=2, prompt_len=8, max_len=32)
+    assert eng.state_version == 0
+    v0 = eng.state_version
+    rng = np.random.default_rng(0)
+    req = E.Request(0, rng.integers(0, cfg.vocab_size, 8), max_new=4)
+    assert eng.admit(req)
+    assert eng.state_version == v0 + 1          # prefill wrote slot 0
+    eng.step()
+    assert eng.state_version == v0 + 2
+    payload = eng.snapshot_payload()
+    assert payload["version"] == eng.state_version
+    assert payload["cache"] is eng.cache
+    assert set(eng.insitu_providers()) >= {"serving_state", "lengths",
+                                           "kv_snapshot"}
+    # idle engine (no admit/step): the hint is stable
+    assert eng.snapshot_payload()["version"] == payload["version"]
+
+
 def test_serving_engine_batched_requests():
     cfg = base.get("smollm-135m", smoke=True)
     prm = P.materialize(jax.random.PRNGKey(0), transformer.param_spec(cfg))

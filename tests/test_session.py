@@ -210,15 +210,36 @@ def test_when_trigger():
     assert [h[0] for h in hits] == [2, 5]
 
 
-def test_interval_trigger_fires_by_wall_clock():
-    plan, hits = _collect_plan(trigger=Interval(0.08))
-    with Session(plan) as s:
-        for i in range(6):
+def test_interval_trigger_fires_by_injected_clock():
+    """Interval reads the session's monotonic clock — tests drive it by
+    hand instead of sleeping, so the expected firings are exact."""
+    now = [0.0]
+    plan, hits = _collect_plan(trigger=Interval(10.0))
+    with Session(plan, clock=lambda: now[0]) as s:
+        for i in range(8):
+            s.emit("x", i, i)                 # emit i happens at t = 4*i
+            now[0] += 4.0
+    # first emit always fires (t=0); then once >= 10s elapse: t=12 (i=3),
+    # t=24 (i=6) — deterministic, no sleep-and-pray
+    assert [h[0] for h in hits] == [0, 3, 6]
+
+
+def test_interval_trigger_fires_every_emit_when_clock_outpaces():
+    now = [0.0]
+    plan, hits = _collect_plan(trigger=Interval(1.0))
+    with Session(plan, clock=lambda: now[0]) as s:
+        for i in range(4):
             s.emit("x", i, i)
-            time.sleep(0.03)
-    steps = [h[0] for h in hits]
-    assert steps[0] == 0                      # first emit always fires
-    assert 2 <= len(steps) < 6                # rate-limited, not per-step
+            now[0] += 1.0                     # exactly one period per emit
+    assert [h[0] for h in hits] == [0, 1, 2, 3]
+
+
+def test_interval_trigger_never_refires_on_a_frozen_clock():
+    plan, hits = _collect_plan(trigger=Interval(5.0))
+    with Session(plan, clock=lambda: 100.0) as s:
+        for i in range(5):
+            s.emit("x", i, i)
+    assert [h[0] for h in hits] == [0]        # only the always-fired first
 
 
 def test_provider_evaluated_once_for_multiple_tasks_on_one_stream():

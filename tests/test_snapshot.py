@@ -1,0 +1,261 @@
+"""SnapshotStore behavior: chains, no-op hints, stats, session preset."""
+import numpy as np
+import pytest
+
+from repro.insitu import InSituPlan, Placement, Session, TaskSpec
+from repro.serving.snapshot import SnapshotCorruptError, SnapshotStore
+
+
+def _slab(rng, n=20000):
+    return {"k": rng.standard_normal(n).astype(np.float32),
+            "v": rng.standard_normal(n).astype(np.float32)}
+
+
+def _mutate(slab, rng, frac=0.05):
+    n = slab["k"].size
+    k = max(1, int(n * frac))
+    at = int(rng.integers(0, n - k))
+    for arr in slab.values():
+        arr[at:at + k] = rng.standard_normal(k)
+
+
+def test_base_delta_cadence_and_restore(tmp_path):
+    rng = np.random.default_rng(0)
+    slab = _slab(rng)
+    store = SnapshotStore(str(tmp_path), base_every=3, chunk_bytes=1 << 12)
+    snaps = []
+    for i in range(7):
+        _mutate(slab, rng)
+        rec = store.publish("kv", i, slab)
+        snaps.append({k: a.copy() for k, a in slab.items()})
+        assert rec.kind == ("base" if i % 3 == 0 else "delta")
+        assert rec.chain_pos == i % 3
+    # newest and every intermediate chain position restore bit-identically
+    for seq, snap in enumerate(snaps):
+        step, leaves = store.restore("kv", upto=seq)
+        assert step == seq
+        for key, arr in snap.items():
+            np.testing.assert_array_equal(leaves[f"['{key}']"], arr)
+    st = store.stats("kv")
+    assert st["bases"] == 3 and st["deltas"] == 4
+    assert st["chain_depth"] == 0   # 7th publish (seq 6) opened a new chain
+    # deltas must store far less than re-publishing full bases would
+    assert st["stored_bytes"] < st["raw_bytes"]
+
+
+def test_memory_store_roundtrip():
+    rng = np.random.default_rng(1)
+    slab = _slab(rng)
+    store = SnapshotStore(None, base_every=4)
+    for i in range(5):
+        _mutate(slab, rng)
+        store.publish("kv", i, slab)
+    step, tree = store.restore("kv", template=slab)
+    assert step == 4
+    for key, arr in slab.items():
+        np.testing.assert_array_equal(tree[key], arr)
+
+
+def test_version_hint_short_circuits_to_noop():
+    rng = np.random.default_rng(2)
+    slab = _slab(rng)
+    store = SnapshotStore(None, base_every=100)
+    r0 = store.publish("kv", 0, slab, version=7)
+    r1 = store.publish("kv", 1, slab, version=7)     # unchanged: no-op
+    _mutate(slab, rng)
+    r2 = store.publish("kv", 2, slab, version=8)
+    assert (r0.kind, r1.kind, r2.kind) == ("base", "noop", "delta")
+    assert r1.stored_bytes < 100                     # marker frame only
+    assert r1.raw_bytes == r0.raw_bytes              # still represents the slab
+    assert r1.ratio > 0.999                          # near-free firing
+    step, leaves = store.restore("kv")
+    assert step == 2
+    np.testing.assert_array_equal(leaves["['k']"], slab["k"])
+    # restoring up to the no-op frame yields the frame-0 snapshot state
+    step, leaves = store.restore("kv", upto=1)
+    assert step == 1
+
+
+def test_idle_stream_noops_past_base_cadence(tmp_path):
+    """An unchanged slab never pays a re-encode — not even when the base
+    cadence expires — and consecutive no-ops collapse into ONE tip frame,
+    so an idle stream's frame count stays bounded."""
+    rng = np.random.default_rng(7)
+    slab = {"x": rng.standard_normal(2000).astype(np.float32)}
+    store = SnapshotStore(str(tmp_path), base_every=3)
+    kinds = [store.publish("kv", i, slab, version=1).kind for i in range(6)]
+    assert kinds == ["base"] + ["noop"] * 5          # idle: no re-encode
+    assert store.published("kv") == [0, 1]           # noops collapsed
+    step, leaves = store.restore("kv")
+    assert step == 5                                 # tip carries last step
+    np.testing.assert_array_equal(leaves["['x']"], slab["x"])
+    # the next *changed* publish chains on (the collapsed chain is short,
+    # so this is a cheap delta, not a forced base re-encode)
+    slab["x"][:50] = 0.0
+    rec = store.publish("kv", 6, slab, version=2)
+    assert rec.kind == "delta" and rec.seq == 2
+    step, leaves = store.restore("kv")
+    assert step == 6
+    np.testing.assert_array_equal(leaves["['x']"], slab["x"])
+    # a fresh reader replays the collapsed chain from disk too
+    step, leaves = SnapshotStore(str(tmp_path),
+                                 base_every=3).restore("kv")
+    assert step == 6
+
+
+def test_out_of_order_publish_is_skipped_as_stale():
+    """Concurrent pool workers can drain firings out of order; a late
+    older-step publish must not become the chain tip."""
+    rng = np.random.default_rng(8)
+    slab = {"x": rng.standard_normal(2000).astype(np.float32)}
+    store = SnapshotStore(None, base_every=4)
+    store.publish("kv", 8, slab)
+    newest = slab["x"].copy()
+    old = {"x": np.zeros(2000, np.float32)}
+    rec = store.publish("kv", 4, old)                # late firing
+    assert rec.kind == "stale" and rec.stored_bytes == 0
+    step, leaves = store.restore("kv")
+    assert step == 8
+    np.testing.assert_array_equal(leaves["['x']"], newest)
+    assert store.stats("kv")["stale_skipped"] == 1
+    # equal-step re-publish is allowed (writer restart semantics)
+    assert store.publish("kv", 8, slab).kind == "delta"
+
+
+@pytest.mark.parametrize("directory", [False, True])
+def test_keep_chains_retention_prunes_retired_chains(tmp_path, directory):
+    rng = np.random.default_rng(9)
+    slab = {"x": rng.standard_normal(2000).astype(np.float32)}
+    store = SnapshotStore(str(tmp_path) if directory else None,
+                          base_every=2, keep_chains=2)
+    for i in range(9):                   # bases at seq 0, 2, 4, 6, 8
+        slab["x"][i * 10:(i + 1) * 10] = rng.standard_normal(10)
+        store.publish("kv", i, slab)
+    kept = store.published("kv")
+    assert kept[0] == 6                  # chains behind base 6 pruned
+    assert kept[-1] == 8
+    step, leaves = store.restore("kv")   # live chain unaffected
+    assert step == 8
+    np.testing.assert_array_equal(leaves["['x']"], slab["x"])
+    with pytest.raises(KeyError, match="no published snapshots"):
+        store.restore("kv", upto=3)      # pruned prefix is gone
+
+
+def test_publish_owns_its_base_despite_inplace_mutation():
+    """The caller may mutate its slab buffer in place between publishes;
+    the store must delta against the *published* bytes, not the alias."""
+    rng = np.random.default_rng(3)
+    slab = {"x": rng.standard_normal(5000).astype(np.float32)}
+    store = SnapshotStore(None, base_every=10, chunk_bytes=1 << 10)
+    snaps = []
+    for i in range(4):
+        slab["x"][i * 100:(i + 1) * 100] = rng.standard_normal(100)
+        store.publish("kv", i, slab)    # same ndarray object every time
+        snaps.append(slab["x"].copy())
+    for seq, snap in enumerate(snaps):
+        _, leaves = store.restore("kv", upto=seq)
+        np.testing.assert_array_equal(leaves["['x']"], snap)
+
+
+def test_tree_shape_change_falls_back_and_template_drift_raises(tmp_path):
+    rng = np.random.default_rng(4)
+    store = SnapshotStore(str(tmp_path), base_every=10)
+    store.publish("kv", 0, {"a": rng.standard_normal(100).astype(np.float32)})
+    grown = {"a": rng.standard_normal(200).astype(np.float32),
+             "b": rng.standard_normal(50).astype(np.float32)}
+    rec = store.publish("kv", 1, grown)      # resized leaf + new leaf
+    assert rec.kind == "delta"
+    _, leaves = store.restore("kv")
+    np.testing.assert_array_equal(leaves["['a']"], grown["a"])
+    np.testing.assert_array_equal(leaves["['b']"], grown["b"])
+    with pytest.raises(KeyError, match="drifted"):
+        store.restore("kv", template={"a": grown["a"], "zz": grown["b"]})
+
+
+def test_bfloat16_leaves_roundtrip(tmp_path):
+    """The serving KV cache is bf16 on every arch config — extension
+    dtypes must survive the delta frame's dtype token."""
+    import ml_dtypes
+
+    rng = np.random.default_rng(11)
+    slab = {"k": rng.standard_normal(4096).astype(ml_dtypes.bfloat16)}
+    store = SnapshotStore(str(tmp_path), base_every=2)
+    for i in range(3):
+        slab["k"][i * 100:(i + 1) * 100] = rng.standard_normal(100)
+        store.publish("kv", i, slab)
+    step, tree = SnapshotStore(str(tmp_path), base_every=2).restore(
+        "kv", template=slab)
+    assert step == 2
+    assert tree["k"].dtype == slab["k"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        tree["k"].view(np.uint16), slab["k"].view(np.uint16))
+
+
+def test_restore_empty_stream_raises_keyerror(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    with pytest.raises(KeyError, match="no published snapshots"):
+        store.restore("kv")
+
+
+def test_bad_base_every_and_codec_rejected(tmp_path):
+    with pytest.raises(ValueError, match="base_every"):
+        SnapshotStore(str(tmp_path), base_every=0)
+    with pytest.raises(KeyError, match="inner codec"):
+        SnapshotStore(str(tmp_path), codec="nope")
+
+
+# -- the serve_snapshot preset end to end -------------------------------------
+
+def test_serve_snapshot_preset_publishes_and_reports():
+    rng = np.random.default_rng(5)
+    slab = _slab(rng, n=5000)
+    version = [0]
+    plan = InSituPlan(
+        streams=["kv_pages"],
+        tasks=[TaskSpec(name="snap", stream="kv_pages",
+                        preset="serve_snapshot",
+                        options={"base_every": 3},
+                        placement=Placement.SYNC)])
+    with Session(plan) as s:
+        for i in range(6):
+            if i % 2 == 0:               # mutate on even steps only
+                _mutate(slab, rng)
+                version[0] += 1
+            s.emit("kv_pages", i,
+                   {"cache": slab, "version": version[0]})
+    rep = s.report()
+    snap = rep["tasks"]["snap"]
+    assert snap["results"] == 6
+    assert snap["publishes"] == 6
+    assert snap["bases"] == 2            # base_every=3 over 6 firings
+    assert snap["noops"] > 0             # odd steps were unchanged
+    assert snap["effective_compression_x"] > 1.0
+    assert "chain_depth" in snap and "delta_ratio" in snap
+    # the store is reachable for restore / chain inspection
+    store = s.snapshot_store("snap")
+    step, tree = store.restore("kv_pages", template=slab)
+    assert step == 5
+    for key, arr in slab.items():
+        np.testing.assert_array_equal(tree[key], arr)
+
+
+def test_serve_snapshot_preset_rejects_unknown_options():
+    """Legacy options of the pre-delta probe (sample_elems) must fail
+    loudly, not silently change semantics."""
+    from repro.insitu import PlanError
+    plan = InSituPlan(
+        streams=["kv"],
+        tasks=[TaskSpec(name="snap", stream="kv", preset="serve_snapshot",
+                        options={"sample_elems": 65536})])
+    with pytest.raises(PlanError, match=r"snap.*sample_elems"):
+        Session(plan)
+
+
+def test_snapshot_store_accessor_unknown_task():
+    from repro.insitu import PlanError
+    plan = InSituPlan(streams=["x"],
+                      tasks=[TaskSpec(name="t", stream="x", sink=print)])
+    with Session(plan) as s:
+        pass
+    with pytest.raises(PlanError, match="no snapshot store"):
+        s.snapshot_store("t")

@@ -1,0 +1,204 @@
+"""Crash consistency: kill-point tests over the snapshot chain protocol.
+
+The publish protocol is frame bytes -> tmp file (fsynced) -> rename in ->
+dir fsync, one file per frame, so a reader can only ever observe complete
+published frames. These tests simulate a crash at each stage — by
+reconstructing the exact on-disk debris that stage leaves behind — and
+assert that restore either replays the published prefix bit-identically or
+raises :class:`SnapshotCorruptError` naming the chain position, mirroring
+``tests/test_checkpoint_crash.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.serving.snapshot import SnapshotCorruptError, SnapshotStore
+
+BASE_EVERY = 3
+N_FRAMES = 8          # bases at seq 0, 3, 6
+
+
+def _publish_chain(directory, n=N_FRAMES, seed=0):
+    """Publish an append-mostly chain; returns the per-seq snapshots."""
+    rng = np.random.default_rng(seed)
+    slab = {"k": rng.standard_normal(20000).astype(np.float32),
+            "v": rng.standard_normal(20000).astype(np.float32)}
+    store = SnapshotStore(str(directory), base_every=BASE_EVERY,
+                          chunk_bytes=1 << 12)
+    snaps = []
+    for i in range(n):
+        at = int(rng.integers(0, 19000))
+        for arr in slab.values():
+            arr[at:at + 1000] = rng.standard_normal(1000)
+        store.publish("kv", i, slab)
+        snaps.append({k: a.copy() for k, a in slab.items()})
+    return snaps
+
+
+def _frames(directory):
+    d = os.path.join(str(directory), "kv")
+    return sorted(os.path.join(d, f) for f in os.listdir(d)
+                  if f.endswith(".snap"))
+
+
+def _assert_restores(directory, want, upto=None):
+    store = SnapshotStore(str(directory), base_every=BASE_EVERY)
+    step, leaves = store.restore("kv", upto=upto)
+    for key, arr in want.items():
+        np.testing.assert_array_equal(leaves[f"['{key}']"], arr)
+    return step
+
+
+# -- kill point 1: crash between publishes (any prefix is a valid chain) ------
+
+def test_restore_succeeds_from_every_published_prefix(tmp_path):
+    snaps = _publish_chain(tmp_path)
+    files = _frames(tmp_path)
+    assert len(files) == N_FRAMES
+    # simulate the crash after frame k by removing everything newer
+    for k in reversed(range(N_FRAMES)):
+        for f in files[k + 1:]:
+            if os.path.exists(f):
+                os.remove(f)
+        assert _assert_restores(tmp_path, snaps[k], upto=None) == k
+
+
+# -- kill point 2: crash mid-write, tmp file never renamed in -----------------
+
+def test_unrenamed_tmp_frame_is_invisible(tmp_path):
+    snaps = _publish_chain(tmp_path)
+    d = os.path.join(str(tmp_path), "kv")
+    # a torn half-frame that never reached its rename
+    with open(os.path.join(d, f".tmp_frame_{N_FRAMES:08d}"), "wb") as f:
+        f.write(b"RPSS\x01garbage-that-never-got-renamed")
+    assert _assert_restores(tmp_path, snaps[-1]) == N_FRAMES - 1
+    # a restarted writer appends past the debris and the chain stays whole
+    store = SnapshotStore(str(tmp_path), base_every=BASE_EVERY,
+                          chunk_bytes=1 << 12)
+    store.publish("kv", 99, snaps[-1])
+    step, _ = store.restore("kv")
+    assert step == 99
+
+
+# -- corruption: truncated / bit-flipped / missing frames ---------------------
+
+def test_truncated_tail_frame_names_chain_position(tmp_path):
+    _publish_chain(tmp_path)
+    victim = _frames(tmp_path)[-1]              # seq 7, a delta
+    blob = open(victim, "rb").read()
+    with open(victim, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(SnapshotCorruptError,
+                       match=r"chain position 7.*crc"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+
+
+def _flip_bit(path):
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+
+
+def test_bitflipped_delta_names_chain_position(tmp_path):
+    snaps = _publish_chain(tmp_path)            # bases at seqs 0, 3, 6
+    _flip_bit(_frames(tmp_path)[7])             # delta in the LIVE chain
+    with pytest.raises(SnapshotCorruptError, match="chain position 7"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+    # a prefix that stops before the damage still restores
+    _assert_restores(tmp_path, snaps[6], upto=6)
+
+
+def test_damage_behind_the_live_base_does_not_block_restore(tmp_path):
+    """A corrupted frame in a *retired* chain (behind the newest base) is
+    dead weight: the live chain replays regardless."""
+    snaps = _publish_chain(tmp_path)            # live chain: base 6, delta 7
+    _flip_bit(_frames(tmp_path)[4])
+    assert _assert_restores(tmp_path, snaps[-1]) == N_FRAMES - 1
+    # ...while explicitly replaying the damaged prefix still raises
+    with pytest.raises(SnapshotCorruptError, match="chain position 4"):
+        SnapshotStore(str(tmp_path),
+                      base_every=BASE_EVERY).restore("kv", upto=5)
+
+
+def test_missing_middle_delta_is_a_chain_gap(tmp_path):
+    _publish_chain(tmp_path)                    # bases at seqs 0, 3, 6
+    files = _frames(tmp_path)
+    os.remove(files[7])                         # tail delta gone...
+    store = SnapshotStore(str(tmp_path), base_every=BASE_EVERY)
+    step, _ = store.restore("kv")               # ...chain up to base 6 whole
+    assert step == 6
+    # now lose base 6 AND delta 4: the newest base is 3 and its chain has
+    # a hole at position 4 — replay must refuse, naming the missing frame
+    os.remove(files[6])
+    os.remove(files[4])
+    with pytest.raises(SnapshotCorruptError,
+                       match=r"chain position 4.*missing"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+
+
+def test_chain_without_base_raises(tmp_path):
+    _publish_chain(tmp_path, n=3)               # base at 0, deltas 1-2
+    os.remove(_frames(tmp_path)[0])
+    with pytest.raises(SnapshotCorruptError, match="no base frame"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+
+
+def test_bitflipped_header_field_is_detected(tmp_path):
+    """The crc covers the header too: a flipped bit in the step field (or
+    n_leaves) must not validate and silently restore wrong metadata."""
+    _publish_chain(tmp_path, n=2)
+    victim = _frames(tmp_path)[1]
+    blob = bytearray(open(victim, "rb").read())
+    blob[15] ^= 0x01            # inside the header's step field
+    with open(victim, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(SnapshotCorruptError,
+                       match=r"chain position 1.*crc"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+
+
+def test_wrong_magic_frame_is_corrupt(tmp_path):
+    _publish_chain(tmp_path, n=2)
+    victim = _frames(tmp_path)[1]
+    blob = bytearray(open(victim, "rb").read())
+    blob[:4] = b"XXXX"
+    with open(victim, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(SnapshotCorruptError, match="magic"):
+        SnapshotStore(str(tmp_path), base_every=BASE_EVERY).restore("kv")
+
+
+# -- writer restart over damaged chains ---------------------------------------
+
+def test_restarted_writer_rebases_over_a_corrupt_chain(tmp_path):
+    """A writer that cannot reconstruct the previous snapshot from disk
+    must open a fresh chain (next publish is a base), and restore then
+    succeeds through the new base regardless of the damage behind it."""
+    snaps = _publish_chain(tmp_path)
+    victim = _frames(tmp_path)[-1]
+    blob = open(victim, "rb").read()
+    with open(victim, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    store = SnapshotStore(str(tmp_path), base_every=BASE_EVERY,
+                          chunk_bytes=1 << 12)
+    rec = store.publish("kv", 100, snaps[-1])
+    assert rec.kind == "base"                   # rebased, not chained
+    step, leaves = store.restore("kv")
+    assert step == 100
+    for key, arr in snaps[-1].items():
+        np.testing.assert_array_equal(leaves[f"['{key}']"], arr)
+
+
+def test_restarted_writer_continues_a_healthy_chain(tmp_path):
+    snaps = _publish_chain(tmp_path, n=4)       # base 0, d1, d2, base 3
+    store = SnapshotStore(str(tmp_path), base_every=BASE_EVERY,
+                          chunk_bytes=1 << 12)
+    mutated = {k: a.copy() for k, a in snaps[-1].items()}
+    mutated["k"][:100] = 0.0
+    rec = store.publish("kv", 4, mutated)
+    assert rec.kind == "delta" and rec.chain_pos == 1
+    step, leaves = store.restore("kv")
+    assert step == 4
+    np.testing.assert_array_equal(leaves["['k']"], mutated["k"])
