@@ -27,8 +27,8 @@ def main() -> None:
                             fig07_sync_compression, fig08_hybrid_compression,
                             fig09_compression_scaling,
                             fig10_12_qe_checkpoint, handoff_overlap,
-                            lossy_ratio, roofline, snapshot_delta,
-                            tab2_codecs)
+                            lossy_ratio, roofline, serving_throughput,
+                            snapshot_delta, tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -46,6 +46,7 @@ def main() -> None:
         ("runtime", handoff_overlap.run),
         ("checkpoint_io", checkpoint_io.run),
         ("snapshot_delta", snapshot_delta.run),
+        ("serving", serving_throughput.run),
     ]
     print("name,us_per_call,derived")
     failures = []
@@ -61,7 +62,7 @@ def main() -> None:
             failures.append((name, e))
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
-    tracked = ("runtime", "checkpoint_io", "snapshot_delta")
+    tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving")
     if not quick and all(name in results for name in tracked):
         # only an unfiltered --full run refreshes the tracked perf artifact
         # (quick-mode numbers are not comparable across PRs, and a --only
@@ -69,6 +70,7 @@ def main() -> None:
         artifact = dict(results["runtime"])
         artifact["checkpoint_io"] = results["checkpoint_io"]
         artifact["snapshot_delta"] = results["snapshot_delta"]
+        artifact["serving"] = results["serving"]
         handoff_overlap.write_artifact(artifact)
         print(f"# wrote {handoff_overlap.ARTIFACT}")
     elif not quick and args.only:

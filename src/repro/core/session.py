@@ -367,11 +367,16 @@ def _serve_snapshot_preset(spec: TaskSpec) -> dict:
     def sink(step: int, payload: Any):
         version = None
         tree = payload
+        hints = None
         if (isinstance(payload, Mapping) and "cache" in payload
                 and "version" in payload):
             version = int(payload["version"])
             tree = payload["cache"]
-        return store.publish(stream, step, tree, version=version)
+            # paged engines ship per-leaf chunk sizes so delta chunks
+            # align to KV pages (untouched pages -> zero-payload COPY)
+            hints = payload.get("chunk_hints")
+        return store.publish(stream, step, tree, version=version,
+                             chunk_hints=hints)
 
     return {"sink": sink, "report": lambda: store.stats(stream),
             "store": store}

@@ -22,6 +22,7 @@ from repro.core import InSituPlan, Session, Telemetry
 from repro.models import params as P_lib
 from repro.models import transformer
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.pages import PagedServingEngine
 
 
 def default_serve_plan(*, insitu_mode: str = "async",
@@ -58,12 +59,25 @@ def default_serve_plan(*, insitu_mode: str = "async",
 
 def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                slots: int = 4, insitu_mode: str = "async",
-               seed: int = 0, plan: Optional[Any] = None, log=print) -> dict:
+               seed: int = 0, plan: Optional[Any] = None,
+               engine_kind: str = "paged", num_pages: int = 17,
+               page_size: int = 16, log=print) -> dict:
     cfg = configs.get(arch, smoke=True)
     params = P_lib.materialize(jax.random.PRNGKey(seed),
                                transformer.param_spec(cfg))
-    engine = ServingEngine(cfg, params, slots=slots, prompt_len=16,
-                           max_len=64)
+    if engine_kind == "paged":
+        # default: continuous batching over the shared page pool — same KV
+        # budget as `slots` dense stripes ((num_pages-1) * page_size tokens)
+        # but admission is per-page, so short requests stop blocking.
+        engine = PagedServingEngine(cfg, params, num_pages=num_pages,
+                                    page_size=page_size, max_reqs=2 * slots,
+                                    prompt_len=16, max_len=64)
+    elif engine_kind == "dense":
+        # parity / benchmark baseline: fixed dense slots
+        engine = ServingEngine(cfg, params, slots=slots, prompt_len=16,
+                               max_len=64)
+    else:
+        raise ValueError(f"unknown engine kind {engine_kind!r}")
     tm = Telemetry()
 
     # serving-side in-situ declared as a plan, same shape as training
@@ -97,6 +111,10 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)
     rep = session.report()
+    if engine_kind == "paged":
+        ps = engine.page_stats()
+        log(f"page pool: {ps['used_pages']}/{ps['num_pages'] - 1} pages "
+            f"in use at exit, {ps['active_requests']} active rows")
     snap = rep["tasks"].get("kv_snapshot", {})
     if snap.get("publishes"):
         log(f"snapshots: {snap['publishes']} published "
@@ -122,6 +140,14 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--insitu", default="async",
                     choices=["sync", "async", "hybrid"])
+    ap.add_argument("--engine", default="paged",
+                    choices=["paged", "dense"],
+                    help="paged = continuous batching over a shared page "
+                         "pool (default); dense = fixed-slot baseline")
+    ap.add_argument("--num-pages", type=int, default=17,
+                    help="page-pool size incl. the reserved scratch page")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must divide max_len)")
     ap.add_argument("--snapshot-base-every", type=int, default=8,
                     help="full base frame every N snapshot publishes")
     ap.add_argument("--snapshot-dir", default=None,
@@ -131,7 +157,9 @@ def main() -> None:
                               base_every=args.snapshot_base_every,
                               snapshot_dir=args.snapshot_dir)
     serve_loop(args.arch, n_requests=args.requests, max_new=args.max_new,
-               insitu_mode=args.insitu, plan=plan)
+               insitu_mode=args.insitu, plan=plan,
+               engine_kind=args.engine, num_pages=args.num_pages,
+               page_size=args.page_size)
 
 
 if __name__ == "__main__":

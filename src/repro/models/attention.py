@@ -144,6 +144,68 @@ def decode_attention(
     return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, dv)
 
 
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize per-request sequences from a block-indexed page pool.
+
+    ``pages``: (num_pages, page_size, ...) — one pool shared by every
+    request; ``page_table``: (B, P) int32 page ids (unused entries point at
+    the reserved scratch page 0 and are masked by ``length`` downstream).
+    Returns (B, P*page_size, ...) in token order: position ``t`` of row
+    ``b`` lives in page ``page_table[b, t // page_size]`` at offset
+    ``t % page_size`` — the same token ordering as a dense slab, which is
+    what keeps paged logits bit-identical to the slab path.
+    """
+    b, p = page_table.shape
+    g = pages[page_table]                 # (B, P, page_size, ...)
+    return g.reshape(b, p * pages.shape[1], *pages.shape[2:])
+
+
+def scatter_token(pages: jax.Array, new: jax.Array, page_table: jax.Array,
+                  lengths: jax.Array, page_size: int) -> jax.Array:
+    """Write one new token per row into its page: position ``lengths[b]``.
+
+    ``new``: (B, ...) — the freshly projected k/v (or MLA latent) rows.
+    Rows whose length exceeds the table (inactive/finished requests) clamp
+    to their last table entry, which the engine keeps pointed at the
+    scratch page — the write lands in garbage no reader ever attends to.
+    """
+    b, p = page_table.shape
+    idx = jnp.minimum(lengths // page_size, p - 1)
+    page = page_table[jnp.arange(b), idx]
+    return pages.at[page, lengths % page_size].set(new.astype(pages.dtype))
+
+
+def paged_decode_attention(
+    q: jax.Array,             # (B, 1, Hq, D)
+    k_pages: jax.Array,       # (num_pages, page_size, N, D)
+    v_pages: jax.Array,       # (num_pages, page_size, N, Dv)
+    page_table: jax.Array,    # (B, P) int32
+    length: jax.Array,        # (B,) valid prefix length (after insert)
+    *,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Single-token attention over a paged KV cache.
+
+    The default path gathers each row's pages into token order and reuses
+    :func:`decode_attention` — positions past ``length`` gather scratch or
+    stale pages but are masked to NEG_INF exactly like the dense slab's
+    zero padding, so the result is bit-identical to a dense cache holding
+    the same tokens. ``use_kernel`` (default: TPU only) switches to the
+    fused Pallas gather-attention kernel in
+    :mod:`repro.kernels.paged_attention`, which never materializes the
+    gathered (B, S, N, D) copy.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import paged_attention as PK
+        return PK.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                         length)
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention(q, k, v, length)
+
+
 def reference_attention(q, k, v, *, causal=True, q_offset=0, window=0):
     """O(S^2) oracle used by tests."""
     b, sq, hq, d = q.shape

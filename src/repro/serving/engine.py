@@ -19,6 +19,7 @@ compression tasks, the paper's checkpoint analog on the inference side).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -424,6 +425,23 @@ class Request:
     done: bool = False
 
 
+def _checked_prompt(req: Request, prompt_len: int) -> np.ndarray:
+    """Clip a prompt to the engine window, loudly.
+
+    Dropping leading tokens changes the completion, so it must never happen
+    silently — the warning names the request and both lengths so the caller
+    can resize the window or chunk the prompt.
+    """
+    prompt = np.asarray(req.prompt)
+    if prompt.shape[-1] > prompt_len:
+        warnings.warn(
+            f"request {req.rid}: prompt length {prompt.shape[-1]} exceeds "
+            f"the engine prompt window ({prompt_len}); keeping only the "
+            f"last {prompt_len} tokens", RuntimeWarning, stacklevel=3)
+        prompt = prompt[-prompt_len:]
+    return prompt
+
+
 class ServingEngine:
     """Slot-based batched serving with greedy decode (framework example).
 
@@ -457,15 +475,16 @@ class ServingEngine:
         for i, a in enumerate(self.active):
             if a is None:
                 self.active[i] = req
-                prompt = req.prompt[-self.prompt_len:]
+                prompt = _checked_prompt(req, self.prompt_len)
                 toks = jnp.asarray(prompt, jnp.int32)[None, :]
-                logits, cache1, lens1 = self._prefill_one(self.params, toks)
+                logits, cache1, _ = self._prefill_one(self.params, toks)
                 # merge slot i of the batch cache from the single-row cache
                 self.cache = jax.tree.map(
                     lambda full, one: _set_batch_slot(full, one, i,
                                                       self.cfg),
                     self.cache, cache1)
-                self.lengths = self.lengths.at[i].set(int(lens1[0]))
+                # host already knows the prompt length — no device sync
+                self.lengths = self.lengths.at[i].set(len(prompt))
                 nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
                 self.tokens = self.tokens.at[i, 0].set(nxt)
                 req.out.append(int(nxt))
@@ -479,10 +498,11 @@ class ServingEngine:
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         self._state_version += 1
+        nxt_host = np.asarray(nxt)   # ONE device->host transfer per step
         for i, req in enumerate(self.active):
             if req is None:
                 continue
-            req.out.append(int(nxt[i]))
+            req.out.append(int(nxt_host[i]))
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.active[i] = None

@@ -121,6 +121,55 @@ def cache_layout(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
     raise ValueError(cfg.family)
 
 
+def paged_cache_layout(cfg: ModelConfig, num_pages: int, page_size: int,
+                       max_reqs: int, max_len: int) -> tuple[PyTree, PyTree]:
+    """Split :func:`cache_layout` into (pool_layout, state_layout).
+
+    Leaves whose sequence axis spans ``max_len`` become block-indexed page
+    pools shared by every request: ``(layers, batch, max_len, ...)`` turns
+    into ``(layers, num_pages, page_size, ...)``. Everything else — SWA ring
+    buffers (bounded at ``window``, already the smaller footprint), SSM /
+    xLSTM recurrent state (O(1) per request) — stays a dense per-row slab
+    with ``batch=max_reqs``; paging fixed-size state would add indirection
+    and save nothing. Either side may be ``{}`` (ssm family has no pool;
+    dense/moe have no state).
+    """
+    is_desc = lambda x: (isinstance(x, tuple) and len(x) in (3, 4)
+                         and isinstance(x[0], tuple))
+
+    def page_desc(d):
+        shape, axes = d[0], d[1]
+        assert axes[:3] == ("layers", "batch", "seq"), axes
+        new_shape = (shape[0], num_pages, page_size) + shape[3:]
+        new_axes = ("layers", "pages", "page_slot") + axes[3:]
+        return (new_shape, new_axes) + d[2:]
+
+    def split(node, in_ring):
+        if is_desc(node):
+            raise TypeError("cache_layout root must be a mapping")
+        pool, state = {}, {}
+        for k, v in node.items():
+            # SWA ring buffers keep ring semantics (slot = t % window) even
+            # when window == max_len, so they are state by name, not shape.
+            ring = in_ring or k == "swa_kv"
+            if is_desc(v):
+                shape, axes = v[0], v[1]
+                if (not ring and "seq" in axes
+                        and shape[axes.index("seq")] == max_len):
+                    pool[k] = page_desc(v)
+                else:
+                    state[k] = v
+            else:
+                p, s = split(v, ring)
+                if p:
+                    pool[k] = p
+                if s:
+                    state[k] = s
+        return pool, state
+
+    return split(cache_layout(cfg, max_reqs, max_len), False)
+
+
 def _map_layout(layout: PyTree, fn) -> PyTree:
     is_desc = lambda x: (isinstance(x, tuple) and len(x) in (3, 4)
                          and isinstance(x[0], tuple))
@@ -132,6 +181,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
         fill = d[3] if len(d) == 4 else 0.0
         return jnp.full(d[0], fill, jnp.dtype(d[2]))
     return _map_layout(cache_layout(cfg, batch, max_len), mk)
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     max_reqs: int, max_len: int) -> tuple[PyTree, PyTree]:
+    """Concrete zeros for (page pool, per-row state)."""
+    def mk(d):
+        fill = d[3] if len(d) == 4 else 0.0
+        return jnp.full(d[0], fill, jnp.dtype(d[2]))
+    pool_l, state_l = paged_cache_layout(cfg, num_pages, page_size,
+                                         max_reqs, max_len)
+    return _map_layout(pool_l, mk), _map_layout(state_l, mk)
 
 
 def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:

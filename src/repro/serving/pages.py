@@ -1,0 +1,511 @@
+"""Paged KV cache + continuous batching (the vLLM/JetStream serving shape).
+
+The dense ``ServingEngine`` gives every slot a full ``(max_len, ...)`` KV
+stripe, so a 5-token reply pays the memory (and admission) cost of the
+longest request and throughput collapses once the fixed slots fill. Here KV
+memory is a shared pool of fixed-size pages per layer:
+
+  pool leaf   (layers, num_pages, page_size, ...)   — block-indexed storage
+  page_table  (max_reqs, pages_per_seq) int32       — per-request chains
+  state leaf  (layers, max_reqs, ...)               — SWA rings / SSM state
+
+A request is admitted whenever a batch row *and* enough free pages exist —
+``ceil((prompt + max_new) / page_size)`` pages are reserved up front so a
+mid-decode exhaustion can never corrupt a neighbour. Completion returns the
+chain to the free list immediately (``free_resource``), so short requests
+stop blocking long ones: no fixed slot count, no head-of-line blocking.
+
+Lifecycle (JetStream's engine vocabulary):
+
+  admit(req)      prefill the prompt, then insert
+  _insert(...)    scatter the prefilled KV into the reserved pages and copy
+                  recurrent state into the request's row
+  step()          one batched decode for every row; page writes go through
+                  the per-request page table
+  free_resource() return pages, zero the table row
+
+Page 0 is reserved as a scratch page: inactive rows' table entries point at
+it, so their (masked, never-read) decode writes land harmlessly there.
+
+Parity: gathering a chain back into token order and masking positions
+``>= length`` to NEG_INF makes the softmax weights of garbage positions
+exactly 0.0 (``exp(NEG_INF - m)`` underflows), so paged decode logits are
+**bit-identical** to the dense slab's — asserted per family in
+tests/test_paged_serving.py. On TPU the fused Pallas kernel
+(repro/kernels/paged_attention.py) replaces the gather and matches to
+float tolerance instead.
+
+Snapshots: ``snapshot_payload`` emits the pool plus per-page dirty versions
+and per-leaf ``chunk_hints`` sized to one (layer, page) slab, so the
+serve_snapshot delta chunks align to pages and untouched pages frame as
+zero-payload COPY ops in the PR-5 store.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import hymba as hymba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import embed, mlp, rmsnorm, unembed
+from repro.models.transformer import project_qkv
+from repro.serving import engine as E
+from repro.serving import kvcache
+from repro.serving.engine import Request, make_prefill
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# paged decode blocks (x: (B,1,d); kv leaves: (num_pages, page_size, ...))
+# ---------------------------------------------------------------------------
+
+def _paged_gqa_attn(p, xn, cfg: ModelConfig, kv, table, lengths, ps):
+    pos = lengths[:, None]                       # rope position of new token
+    q, k, v = project_qkv(p, xn, cfg, pos)
+    kc = attn_lib.scatter_token(kv["k"], k[:, 0], table, lengths, ps)
+    vc = attn_lib.scatter_token(kv["v"], v[:, 0], table, lengths, ps)
+    o = attn_lib.paged_decode_attention(q, kc, vc, table, lengths + 1)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": kc, "v": vc}
+
+
+def _paged_mla_attn(p, xn, cfg: ModelConfig, kv, table, lengths, ps):
+    pos = lengths[:, None]
+    ckv_new, krope_new = mla_lib.mla_new_cache_entry(p, xn, cfg, pos)
+    ckv = attn_lib.scatter_token(kv["ckv"], ckv_new[:, 0], table, lengths, ps)
+    krope = attn_lib.scatter_token(kv["krope"], krope_new[:, 0], table,
+                                   lengths, ps)
+    # MLA decode is a latent-space matmul over the whole prefix — gather the
+    # chain into token order and reuse the dense path (masked identically).
+    o = mla_lib.mla_decode(p, xn, cfg,
+                           attn_lib.gather_pages(ckv, table),
+                           attn_lib.gather_pages(krope, table), lengths + 1)
+    return o, {"ckv": ckv, "krope": krope}
+
+
+def _paged_dense_block(p, x, cfg, kv, table, lengths, ps):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = _paged_mla_attn(p["attn"], xn, cfg, kv, table, lengths, ps)
+    else:
+        a, kv = _paged_gqa_attn(p["attn"], xn, cfg, kv, table, lengths, ps)
+    x = x + a
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], xn), kv
+
+
+def _paged_moe_block(p, x, cfg, kv, table, lengths, ps):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = _paged_mla_attn(p["attn"], xn, cfg, kv, table, lengths, ps)
+    else:
+        a, kv = _paged_gqa_attn(p["attn"], xn, cfg, kv, table, lengths, ps)
+    x = x + a
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y, _ = moe_lib.moe_ffn(p["moe"], xn, cfg)
+    return x + y, kv
+
+
+def _paged_hybrid_block(p, x, cfg, kv, table, ssm_state, lengths, ps):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = _paged_gqa_attn(p["attn"], xn, cfg, kv, table, lengths, ps)
+    s, ssm_state = ssm_lib.ssm_decode(p["ssm"], xn, cfg, ssm_state)
+    x = x + hymba_lib.fuse(p["fusion"], a, s, cfg)
+    xn = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], xn), kv, ssm_state
+
+
+def _paged_hybrid_decode(params, cfg, pool, state, table, lengths, h, ps):
+    """Global layers page; SWA rings and SSM state stay per-row slabs."""
+    gids = set(hymba_lib.global_layer_ids(cfg))
+    kinds = ["g" if i in gids else "s" for i in range(cfg.n_layers)]
+    g_idx = s_idx = 0
+    new_g_kv, new_s_kv, new_g_ssm, new_s_ssm = [], [], [], []
+    i = 0
+    while i < cfg.n_layers:
+        j = i
+        while j < cfg.n_layers and kinds[j] == kinds[i]:
+            j += 1
+        count = j - i
+        is_g = kinds[i] == "g"
+        idx0 = g_idx if is_g else s_idx
+        pkey = "global_blocks" if is_g else "swa_blocks"
+        part = lambda t: jax.tree.map(lambda a: a[idx0:idx0 + count], t)
+        part_p = part(params[pkey])
+        if is_g:
+            part_kv = part(pool["global_kv"])
+            part_ssm = part(state["ssm_global"])
+
+            def step(carry, xs):
+                p_l, kv_l, ssm_l = xs
+                x, kv, ssm = _paged_hybrid_block(
+                    p_l, carry, cfg, kv_l, table, ssm_l, lengths, ps)
+                return x, (kv, ssm)
+        else:
+            part_kv = part(state["swa_kv"])
+            part_ssm = part(state["ssm_swa"])
+
+            def step(carry, xs):
+                p_l, kv_l, ssm_l = xs
+                x, kv, ssm = E._hybrid_decode_block(
+                    p_l, carry, cfg, kv_l, ssm_l, lengths,
+                    window=cfg.swa_window)
+                return x, (kv, ssm)
+
+        h, (kv_new, ssm_new) = E._maybe_scan(
+            step, h, (part_p, part_kv, part_ssm), cfg.scan_layers)
+        (new_g_kv if is_g else new_s_kv).append(kv_new)
+        (new_g_ssm if is_g else new_s_ssm).append(ssm_new)
+        if is_g:
+            g_idx += count
+        else:
+            s_idx += count
+        i = j
+
+    cat = lambda parts: (jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+                         if len(parts) > 1 else parts[0])
+    pool = {"global_kv": cat(new_g_kv)}
+    state = {"swa_kv": cat(new_s_kv), "ssm_global": cat(new_g_ssm),
+             "ssm_swa": cat(new_s_ssm)}
+    return h, pool, state
+
+
+def make_paged_decode(cfg: ModelConfig, page_size: int) -> Callable:
+    """decode(params, pool, state, page_table, tokens (B,1), lengths (B,))
+    -> (logits, pool, state, lengths+1)."""
+    ps = page_size
+
+    def decode(params, pool, state, page_table, tokens, lengths):
+        h = embed(params["embed"], tokens)
+
+        if cfg.family in ("dense", "audio", "vlm"):
+            body = lambda x, p, kv: _paged_dense_block(
+                p, x, cfg, kv, page_table, lengths, ps)
+            h, kv = E._scan_decode(params["blocks"], pool["kv"], h, lengths,
+                                   body, use_scan=cfg.scan_layers)
+            pool = {"kv": kv}
+
+        elif cfg.family == "moe":
+            m = cfg.moe
+            kv = pool["kv"]
+            split = lambda t: (jax.tree.map(lambda a: a[:m.first_dense], t),
+                               jax.tree.map(lambda a: a[m.first_dense:], t))
+            kv_d, kv_m = split(kv) if m.first_dense else (None, kv)
+            if m.first_dense:
+                body_d = lambda x, p, k: _paged_dense_block(
+                    p, x, cfg, k, page_table, lengths, ps)
+                h, kv_d = E._scan_decode(params["dense_blocks"], kv_d, h,
+                                         lengths, body_d,
+                                         use_scan=cfg.scan_layers)
+            body_m = lambda x, p, k: _paged_moe_block(
+                p, x, cfg, k, page_table, lengths, ps)
+            h, kv_m = E._scan_decode(params["moe_blocks"], kv_m, h, lengths,
+                                     body_m, use_scan=cfg.scan_layers)
+            joined = (jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                   kv_d, kv_m) if m.first_dense else kv_m)
+            pool = {"kv": joined}
+
+        elif cfg.family == "hybrid":
+            h, pool, state = _paged_hybrid_decode(
+                params, cfg, pool, state, page_table, lengths, h, ps)
+
+        elif cfg.family == "ssm":
+            h, state = E._xlstm_decode(params, cfg, state, h)
+
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg.vocab_size)
+        return logits, pool, state, lengths + 1
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Host-side free list over page ids 1..num_pages-1 (0 is scratch).
+
+    Whole chains are reserved at admission, so allocation can never fail
+    mid-decode; double-free and foreign-page frees raise instead of
+    corrupting the list (property-tested in tests/test_paged_serving.py).
+    """
+
+    def __init__(self, num_pages: int) -> None:
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> 1, 2, ...
+        self._used: set[int] = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Reserve n pages, or None if the pool can't cover them."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"page {p} freed but not allocated")
+            self._used.discard(p)
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# prefill-cache split + jitted insert helpers
+# ---------------------------------------------------------------------------
+
+def _split_tree(tree: dict, pool_l: dict, state_l: dict):
+    """Partition a prefill cache into (pool-side, state-side) subtrees
+    following the paged_cache_layout split."""
+    pool, state = {}, {}
+    for k, v in tree.items():
+        if k in pool_l and k in state_l:          # mixed subtree
+            p, s = _split_tree(v, pool_l[k], state_l[k])
+            pool[k], state[k] = p, s
+        elif k in pool_l:
+            pool[k] = v
+        else:
+            state[k] = v
+    return pool, state
+
+
+def _insert_pages(pool, pool1, page_ids):
+    """Scatter a single-request prefill cache into the reserved pages.
+
+    pool leaf (L, NP, PS, ...) <- pool1 leaf (L, 1, max_len, ...): the first
+    n*PS prompt positions, reshaped to n page slabs. Retraces per distinct
+    page count n (bounded by pages_per_seq).
+    """
+    n = page_ids.shape[0]
+
+    def leaf(full, one):
+        layers, _, ps = full.shape[:3]
+        chunk = one[:, 0, :n * ps].reshape(layers, n, ps, *one.shape[3:])
+        return full.at[:, page_ids].set(chunk.astype(full.dtype))
+
+    return jax.tree.map(leaf, pool, pool1)
+
+
+def _insert_state(state, state1, row, cfg):
+    return jax.tree.map(
+        lambda full, one: E._set_batch_slot(full, one, row, cfg),
+        state, state1)
+
+
+def _insert_fused(pool, state, page_table, lengths, tokens,
+                  pool1, state1, logits, row, page_ids, n_prompt, *, cfg):
+    """Everything after prefill as ONE jitted computation.
+
+    Scatters the prompt KV into the reserved pages, copies per-row state,
+    writes the table row (unused slots stay on the scratch page 0), stamps
+    the length, and picks the first sampled token — a single dispatch where
+    the unfused path paid six plus an extra device sync. Retraces per page
+    count (bounded by pages_per_seq) and per pytree structure only.
+    """
+    if pool1:
+        pool = _insert_pages(pool, pool1, page_ids)
+    if state1:
+        state = _insert_state(state, state1, row, cfg)
+    pps = page_table.shape[1]
+    table_row = jnp.zeros((pps,), jnp.int32).at[:page_ids.shape[0]].set(
+        page_ids)
+    page_table = page_table.at[row].set(table_row)
+    lengths = lengths.at[row].set(n_prompt)
+    nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+    tokens = tokens.at[row, 0].set(nxt)
+    return pool, state, page_table, lengths, tokens, nxt
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV pool (drop-in for ServingEngine).
+
+    ``num_pages`` x ``page_size`` tokens of KV storage are shared by up to
+    ``max_reqs`` concurrent rows; admission needs one free row plus the
+    request's full page budget. Decode proceeds while new requests prefill
+    into free pages between steps, and completed chains are reclaimed
+    immediately.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, num_pages: int = 65,
+                 page_size: int = 16, max_reqs: int = 8,
+                 prompt_len: int = 64, max_len: int = 256) -> None:
+        if max_len % page_size:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"page_size={page_size}")
+        self.cfg = cfg
+        self.params = params
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_reqs = max_reqs
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+        self.pages_per_seq = max_len // page_size
+
+        self._pool_layout, self._state_layout = kvcache.paged_cache_layout(
+            cfg, num_pages, page_size, max_reqs, max_len)
+        self.pool, self.state = kvcache.init_paged_cache(
+            cfg, num_pages, page_size, max_reqs, max_len)
+        self.page_table = jnp.zeros((max_reqs, self.pages_per_seq), jnp.int32)
+        self.lengths = jnp.zeros((max_reqs,), jnp.int32)
+        self.tokens = jnp.zeros((max_reqs, 1), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * max_reqs
+        self.allocator = PageAllocator(num_pages)
+        self._chains: list[list[int]] = [[] for _ in range(max_reqs)]
+        self._len_host = np.zeros(max_reqs, np.int64)   # device-sync-free
+
+        _dec = make_paged_decode(cfg, page_size)
+
+        def _step(params, pool, state, table, tokens, lengths):
+            logits, pool, state, lengths = _dec(params, pool, state, table,
+                                                tokens, lengths)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, nxt[:, None], pool, state, lengths
+
+        self._decode = jax.jit(_step)
+        self._prefill_one = jax.jit(make_prefill(cfg, max_len,
+                                                 last_only=True))
+        self._insert_fused = jax.jit(partial(_insert_fused, cfg=cfg))
+        self._clear_row = jax.jit(
+            lambda table, lengths, row: (table.at[row].set(0),
+                                         lengths.at[row].set(0)))
+
+        self._state_version = 0
+        self._page_versions = np.zeros(num_pages, np.int64)
+        self._chunk_hints = {
+            jax.tree_util.keystr(path):
+                int(np.prod(leaf.shape[2:])) * leaf.dtype.itemsize
+            for path, leaf in
+            jax.tree_util.tree_flatten_with_path({"pool": self.pool})[0]}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, req: Request) -> bool:
+        """Prefill + insert; False when no row or not enough free pages."""
+        row = next((i for i, a in enumerate(self.active) if a is None), None)
+        if row is None:
+            return False
+        prompt = E._checked_prompt(req, self.prompt_len)
+        s = len(prompt)
+        if s + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({s}) + max_new ({req.max_new}) "
+                f"exceeds max_len={self.max_len}")
+        n_total = -(-(s + req.max_new) // self.page_size)
+        pages = self.allocator.alloc(n_total)    # reserve the whole chain
+        if pages is None:
+            return False
+        self._insert(row, req, prompt, pages)
+        return True
+
+    def _insert(self, row: int, req: Request, prompt: np.ndarray,
+                pages: list[int]) -> None:
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, cache1, _ = self._prefill_one(self.params, toks)
+        pool1, state1 = _split_tree(cache1, self._pool_layout,
+                                    self._state_layout)
+        (self.pool, self.state, self.page_table, self.lengths,
+         self.tokens, nxt) = self._insert_fused(
+            self.pool, self.state, self.page_table, self.lengths,
+            self.tokens, pool1, state1, logits, jnp.int32(row),
+            jnp.asarray(pages, jnp.int32), jnp.int32(len(prompt)))
+        req.out.append(int(nxt))                 # one device sync per admit
+        self.active[row] = req
+        self._chains[row] = list(pages)
+        self._len_host[row] = len(prompt)
+        self._state_version += 1
+        self._page_versions[pages] = self._state_version
+
+    def free_resource(self, row: int) -> None:
+        """Return the chain to the pool and point the row at scratch."""
+        self.allocator.free(self._chains[row])
+        self._chains[row] = []
+        self.active[row] = None
+        self.page_table, self.lengths = self._clear_row(
+            self.page_table, self.lengths, jnp.int32(row))
+        self._len_host[row] = 0
+
+    def step(self) -> None:
+        nxt, self.tokens, self.pool, self.state, self.lengths = self._decode(
+            self.params, self.pool, self.state, self.page_table,
+            self.tokens, self.lengths)
+        self._state_version += 1
+        nxt_host = np.asarray(nxt)               # one device->host transfer
+        for r, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt_host[r]))
+            pos = self._len_host[r]              # slot this decode wrote
+            self._page_versions[self._chains[r][pos // self.page_size]] = \
+                self._state_version
+            self._len_host[r] += 1
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.free_resource(r)
+
+    def run(self, requests: list[Request], max_steps: int = 512) -> None:
+        pending = list(requests)
+        for _ in range(max_steps):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if not pending and all(a is None for a in self.active):
+                return
+            if any(a is not None for a in self.active):
+                self.step()
+
+    # -- introspection / in-situ --------------------------------------------
+
+    @property
+    def state_version(self) -> int:
+        return self._state_version
+
+    def page_stats(self) -> dict[str, float]:
+        used = (self.num_pages - 1) - self.allocator.free_pages
+        return {
+            "num_pages": self.num_pages,
+            "free_pages": self.allocator.free_pages,
+            "used_pages": used,
+            "page_utilization": used / max(1, self.num_pages - 1),
+            "active_requests": sum(a is not None for a in self.active),
+            "occupancy": (sum(a is not None for a in self.active)
+                          / self.max_reqs),
+        }
+
+    def snapshot_payload(self) -> dict[str, Any]:
+        """serve_snapshot payload: pool + state + tables, page-aligned.
+
+        ``chunk_hints`` sizes each pool leaf's delta chunks to one
+        (layer, page) slab and ``page_versions`` records which pages moved,
+        so unchanged pages frame as zero-payload COPY ops in the store.
+        """
+        cache = {"pool": self.pool, "state": self.state,
+                 "page_table": self.page_table, "lengths": self.lengths}
+        return {"cache": cache, "version": self._state_version,
+                "page_versions": self._page_versions.copy(),
+                "chunk_hints": dict(self._chunk_hints)}
+
+    def insitu_providers(self) -> dict[str, Callable[[], Any]]:
+        return {"serving_state": lambda: {"pool": self.pool,
+                                          "state": self.state},
+                "lengths": lambda: self.lengths,
+                "page_stats": lambda: self.page_stats(),
+                "kv_snapshot": lambda: self.snapshot_payload()}

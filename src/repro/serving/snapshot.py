@@ -350,13 +350,23 @@ class SnapshotStore:
         return st
 
     def publish(self, stream: str, step: int, tree: PyTree, *,
-                version: Optional[int] = None) -> SnapshotRecord:
+                version: Optional[int] = None,
+                chunk_hints: Optional[Mapping[str, int]] = None
+                ) -> SnapshotRecord:
         """Encode + publish one snapshot of ``tree`` on ``stream``.
 
         ``version`` is the producer's cheap mutation counter (e.g.
         ``ServingEngine.state_version``): when it matches the previously
         published version, the slab is untouched and the publish
         short-circuits to a no-op frame without walking the payload.
+
+        ``chunk_hints`` maps flattened leaf keys to a per-leaf chunk size,
+        overriding the store-wide ``chunk_bytes`` for those leaves. The
+        paged serving engine passes one (layer, page) slab per chunk, so
+        delta chunks align to KV pages and every untouched page frames as
+        a zero-payload COPY op. Pass the same hints on every publish of a
+        stream — chunk boundaries must line up with the retained base for
+        the per-chunk comparison to detect unchanged pages.
         """
         with self._lock:
             st = self._state(stream)
@@ -416,11 +426,13 @@ class SnapshotStore:
             pool = codecs.codec_pool() if self.parallel else None
             blobs: dict[str, bytes] = {}
             raw = 0
+            hints = chunk_hints or {}
             for key, arr in leaves.items():
                 base = None if base_due else (st.last_leaves or {}).get(key)
                 blob, stats = delta.encode(
                     arr, base, codec=self.codec,
-                    chunk_bytes=self.chunk_bytes, pool=pool)
+                    chunk_bytes=int(hints.get(key, self.chunk_bytes)),
+                    pool=pool)
                 blobs[key] = blob
                 raw += stats.raw_bytes
             kind = KIND_BASE if base_due else KIND_DELTA
