@@ -21,7 +21,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (checkpoint_io, fig02_cpu_sync_vs_async,
+    from benchmarks import (checkpoint_io, fault_recovery,
+                            fig02_cpu_sync_vs_async,
                             fig03_sync_cores, fig04_async_allocation,
                             fig05_insitu_frequency, fig06_scaling_nodes,
                             fig07_sync_compression, fig08_hybrid_compression,
@@ -47,6 +48,7 @@ def main() -> None:
         ("checkpoint_io", checkpoint_io.run),
         ("snapshot_delta", snapshot_delta.run),
         ("serving", serving_throughput.run),
+        ("fault", fault_recovery.run),
     ]
     print("name,us_per_call,derived")
     failures = []
@@ -62,7 +64,8 @@ def main() -> None:
             failures.append((name, e))
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
-    tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving")
+    tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving",
+               "fault")
     if not quick and all(name in results for name in tracked):
         # only an unfiltered --full run refreshes the tracked perf artifact
         # (quick-mode numbers are not comparable across PRs, and a --only
@@ -71,6 +74,7 @@ def main() -> None:
         artifact["checkpoint_io"] = results["checkpoint_io"]
         artifact["snapshot_delta"] = results["snapshot_delta"]
         artifact["serving"] = results["serving"]
+        artifact["fault"] = results["fault"]
         handoff_overlap.write_artifact(artifact)
         print(f"# wrote {handoff_overlap.ARTIFACT}")
     elif not quick and args.only:

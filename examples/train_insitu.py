@@ -12,10 +12,36 @@ compressed checkpointing — declared as one plain-dict ``InSituPlan``
     resumes from the latest atomic checkpoint.
 
     PYTHONPATH=src python examples/train_insitu.py --steps 300
+
+``--inject-sink-faults`` is the transient-IO drill: the analytics sink
+fails with ``TransientError`` on a schedule (recovers under retry early,
+exhausts retries later), and the run must complete anyway with the
+degradation named in the session report.
 """
 import argparse
 
+from repro.core.runtime import TransientError
 from repro.launch.train import train_loop
+
+
+def make_analytics_fault():
+    """Deterministic transient-failure schedule for the analytics sink.
+
+    Firings at steps < 10 fail twice then succeed (retry-with-backoff
+    recovers); firings at steps >= 10 always fail (retries exhaust, the
+    task degrades and later firings are dropped, not raised).
+    """
+    attempts: dict = {}
+
+    def fault(step: int) -> None:
+        attempts[step] = attempts.get(step, 0) + 1
+        if step < 10:
+            if attempts[step] <= 2:
+                raise TransientError(f"injected transient IO @ step {step}")
+            return
+        raise TransientError(f"injected persistent IO outage @ step {step}")
+
+    return fault
 
 
 def main() -> None:
@@ -27,22 +53,30 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_insitu")
     ap.add_argument("--full-135m", action="store_true",
                     help="use the full config (needs accelerator memory)")
+    ap.add_argument("--inject-sink-faults", action="store_true",
+                    help="transient-IO drill on the analytics sink")
     args = ap.parse_args()
 
+    # the drill pins analytics SYNC so the fail/degrade/drop schedule is
+    # deterministic (async workers may lag the loop by a few steps)
+    analytics_placement = "sync" if args.inject_sink_faults else args.insitu
     # the whole in-situ workflow, declared as data (TOML/JSON-loadable)
     plan = {
         "streams": ["grads", "train_state"],
         "workers": 2,
         "tasks": {
             "analytics": {"stream": "grads", "preset": "grad_health",
-                          "every": 10, "placement": args.insitu},
+                          "every": 10, "placement": analytics_placement,
+                          "retries": 3, "retry_backoff_s": 0.01},
             "checkpoint": {"stream": "train_state", "preset": "checkpoint",
                            "every": 50, "placement": args.insitu,
                            "options": {"directory": args.ckpt_dir}},
         },
     }
+    sink_faults = ({"analytics": make_analytics_fault()}
+                   if args.inject_sink_faults else None)
     out = train_loop(args.arch, steps=args.steps, smoke=not args.full_135m,
-                     plan=plan)
+                     plan=plan, sink_faults=sink_faults)
 
     losses = out["losses"]
     print(f"\nfirst loss {losses[0]:.4f} -> last loss {losses[-1]:.4f} "
@@ -60,6 +94,15 @@ def main() -> None:
               f"{ck['stored_bytes'] / 1e6:.1f}MB stored, "
               f"kept steps {ck['kept_steps']}")
     print(f"stragglers: {out['straggler_report']['stragglers']}")
+    if args.inject_sink_faults:
+        retries = rep.get("retries", {}).get("analytics", 0)
+        deg = rep.get("degraded", {}).get("analytics")
+        print(f"sink-fault drill: {retries} retries, degraded={deg}")
+        assert retries > 0, "expected retried transient sink failures"
+        assert deg is not None and deg["dropped"] >= 1, (
+            "expected the analytics task to degrade and drop firings")
+        assert not rep["errors"], f"no task may raise: {rep['errors']}"
+        print("sink-fault drill passed: run completed, degradation reported")
 
 
 if __name__ == "__main__":

@@ -269,6 +269,16 @@ class CheckpointManager:
                                    pool=self._codec_pool())
         return step, state
 
+    def read_meta(self, step: Optional[int] = None) -> dict:
+        """The meta dict recorded with a checkpoint's manifest (e.g. the
+        mesh geometry ``Session.set_checkpoint_meta`` attaches); latest
+        step when ``step`` is None."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.cfg.directory}")
+        d = os.path.join(self.cfg.directory, f"step_{step:09d}")
+        return dict(ser.read_manifest(d).get("meta") or {})
+
     # -- lifecycle ------------------------------------------------------------
 
     def finish(self) -> None:

@@ -7,8 +7,8 @@ are deprecation shims over it.
 from repro.core.insitu import (InSituEngine, InSituMode, InSituTask,
                                run_workflow)
 from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
-                                Placement, Stage, TaskResult, run_pipeline,
-                                split_payload)
+                                Placement, Stage, TaskResult, TransientError,
+                                run_pipeline, split_payload)
 from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
                                 Interval, PlanError, Session, StreamSpec,
                                 TaskSpec, When, preset_names, register_preset)
@@ -17,7 +17,8 @@ from repro.core.telemetry import Telemetry
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
            "FanoutStage", "PipelineRuntime", "PipelineTask", "Placement",
-           "Stage", "TaskResult", "run_pipeline", "split_payload",
+           "Stage", "TaskResult", "TransientError", "run_pipeline",
+           "split_payload",
            "Adaptive", "Every", "InSituPlan", "InSituTaskError", "Interval",
            "PlanError", "Session", "StreamSpec", "TaskSpec", "When",
            "preset_names", "register_preset",

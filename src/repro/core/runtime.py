@@ -53,6 +53,23 @@ Backpressure on a full ring is a per-task policy:
           *effective* firing period (capped) — the F3 mitigation: fire
           less often when the in-situ side outgrows its resources.
 
+A task with ``budget_s`` set additionally widens on *wall clock*: when the
+loop-blocking in-situ cost of a firing (hand-off dispatch + any
+loop-blocking materialization + sync chain time — exactly what the
+telemetry spans charge to the critical path) exceeds the budget for
+``adapt_after`` consecutive firings, the effective period doubles (capped
+at ``adapt_max_every``). This is the straggler policy's lever: a contended
+host sheds in-situ load before the application slows down.
+
+Sink IO is failure-aware: a sink (or an injected fault hook — see
+``inject_sink_fault``) raising :class:`TransientError` is retried with
+capped exponential backoff (``retries`` / ``retry_backoff_s``); exhausted
+retries put the task into a *degraded* state — the firing is dropped,
+later firings are shed and counted (``runtime.degraded``), and the failure
+is reported rather than raised, so a flaky sink can never crash the
+training loop. Any other exception is permanent and still lands in
+``runtime.errors`` (surfaced by ``Session.finish(raise_on_error=True)``).
+
 Telemetry: every firing records per-placement spans under the same names
 the pre-runtime engine used (``step/compute``, ``insitu-sync/<task>``,
 ``insitu-async/<task>``, ``insitu-device/<task>``, ``staging/wait``) plus
@@ -82,6 +99,18 @@ from repro.core.telemetry import Telemetry
 PyTree = Any
 
 BACKPRESSURE_POLICIES = ("block", "drop", "adapt")
+
+_BACKOFF_CAP_S = 2.0          # ceiling for the exponential sink-retry backoff
+
+# sentinel a degraded sink firing resolves to (never a caller-visible result)
+_DEGRADED = object()
+
+
+class TransientError(RuntimeError):
+    """A sink failure expected to clear on retry (flaky IO, a briefly
+    unreachable store, an injected fault). The runtime retries these with
+    capped exponential backoff; anything else is permanent and goes to
+    ``runtime.errors`` untouched."""
 
 
 class Placement(enum.Enum):
@@ -264,6 +293,14 @@ class PipelineTask:
     ``shards``        split each firing into N independent sub-items
                       (models the paper's internally-parallel in-situ tasks).
     ``backpressure``  ring-full policy: 'block' | 'drop' | 'adapt'.
+    ``budget_s``      wall-clock widening: when a firing's loop-blocking
+                      in-situ cost exceeds this budget ``adapt_after``
+                      times in a row, the effective period doubles
+                      (capped at ``adapt_max_every``).
+    ``retries``       attempts re-run after a :class:`TransientError` from
+                      the sink before the task degrades (drops firings
+                      instead of raising).
+    ``retry_backoff_s``  first retry delay; doubles per attempt, capped.
     """
     name: str
     source: str
@@ -279,6 +316,9 @@ class PipelineTask:
     backpressure: str = "block"
     adapt_after: int = 2        # consecutive full-ring firings before adapting
     adapt_max_every: int = 64   # cap for the adapted firing period
+    budget_s: Optional[float] = None
+    retries: int = 3
+    retry_backoff_s: float = 0.05
 
     def __post_init__(self) -> None:
         if self.backpressure not in BACKPRESSURE_POLICIES:
@@ -287,6 +327,13 @@ class PipelineTask:
                 f"got {self.backpressure!r}")
         if self.every < 1:
             raise ValueError("every must be >= 1")
+        if self.budget_s is not None and self.budget_s <= 0:
+            raise ValueError(f"budget_s must be > 0, got {self.budget_s}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}")
 
 
 @dataclass
@@ -318,9 +365,14 @@ class PipelineRuntime:
         self.results: list[TaskResult] = []
         self.errors: list[tuple[str, int, BaseException]] = []
         self.drops: dict[str, int] = {}
+        self.degraded: dict[str, dict] = {}       # task -> degradation info
+        self.retry_counts: dict[str, int] = {}
+        self._sink_faults: dict[str, Callable[[int], Any]] = {}
+        self._sleep = time.sleep                  # injectable for tests
         self._tasks: dict[str, PipelineTask] = {}
         self._every: dict[str, int] = {}
         self._pressure: dict[str, int] = {}
+        self._budget_over: dict[str, int] = {}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._queued = 0       # async items enqueued on the ring
@@ -338,7 +390,9 @@ class PipelineRuntime:
         self._tasks[task.name] = task
         self._every[task.name] = int(task.every)
         self._pressure[task.name] = 0
+        self._budget_over[task.name] = 0
         self.drops[task.name] = 0
+        self.retry_counts[task.name] = 0
         if (task.placement is not Placement.SYNC or task.shards > 1
                 or any(isinstance(s, FanoutStage) for s in task.host_stages)):
             self._ensure_pool()
@@ -351,6 +405,35 @@ class PipelineRuntime:
     def effective_every(self, name: str) -> int:
         """Current firing period (grows under the 'adapt' policy)."""
         return self._every[name]
+
+    def widen_every(self, name: str, max_every: Optional[int] = None) -> bool:
+        """Double a task's effective firing period (capped); False at cap.
+
+        The shared lever behind the 'adapt' backpressure policy, the
+        ``budget_s`` wall-clock trigger, and the straggler mitigation's
+        shed-in-situ-load step (``Session.shed_insitu``).
+        """
+        task = self._tasks[name]
+        cap = task.adapt_max_every if max_every is None else int(max_every)
+        new = min(self._every[name] * 2, cap)
+        if new == self._every[name]:
+            return False
+        self._every[name] = new
+        return True
+
+    def inject_sink_fault(self, name: str,
+                          fault: Optional[Callable[[int], Any]] = None) -> None:
+        """Install (or clear, with ``fault=None``) a fault hook in front of a
+        task's sink. ``fault(step)`` runs before every sink attempt —
+        including retries — and raises to simulate the failure
+        (:class:`TransientError` exercises the retry/degrade path, anything
+        else the permanent-error path)."""
+        if name not in self._tasks:
+            raise ValueError(f"unknown task {name!r}")
+        if fault is None:
+            self._sink_faults.pop(name, None)
+        else:
+            self._sink_faults[name] = fault
 
     def _ensure_pool(self) -> None:
         while len(self._threads) < self.workers:
@@ -397,7 +480,43 @@ class PipelineRuntime:
                                                      payload)
                 else:
                     payload = stage.fn(step, payload)
-        return task.sink(step, payload)
+        return self._call_sink(task, step, payload)
+
+    def _call_sink(self, task: PipelineTask, step: int, payload: Any) -> Any:
+        """Sink IO with transient-failure retry and graceful degradation.
+
+        :class:`TransientError` (from the sink or an injected fault hook)
+        retries with capped exponential backoff; exhausting ``task.retries``
+        degrades the task — the sentinel result is swallowed by every
+        caller, the failure is recorded in ``self.degraded`` with step
+        context, and later firings are shed in ``_fire``. Other exceptions
+        propagate (permanent failures keep their existing error path).
+        """
+        attempt = 0
+        while True:
+            try:
+                fault = self._sink_faults.get(task.name)
+                if fault is not None:
+                    fault(step)
+                return task.sink(step, payload)
+            except TransientError as e:
+                attempt += 1
+                if attempt > task.retries:
+                    with self._lock:
+                        # an already-degraded task keeps its first record
+                        # (a racing in-flight firing must not reset the
+                        # dropped counter)
+                        self.degraded.setdefault(task.name, {
+                            "step": step, "dropped": 0,
+                            "retries": task.retries,
+                            "error": f"{type(e).__name__}: {e}"})
+                    self.telemetry.count(f"sink/degraded/{task.name}")
+                    return _DEGRADED
+                with self._lock:
+                    self.retry_counts[task.name] += 1
+                self.telemetry.count(f"sink/retry/{task.name}")
+                self._sleep(min(task.retry_backoff_s * (2 ** (attempt - 1)),
+                                _BACKOFF_CAP_S))
 
     def _drain_fanout(self, group: _FanoutGroup) -> None:
         """Run fan-out items until the group's queue is empty."""
@@ -451,10 +570,11 @@ class PipelineRuntime:
                                      step=item.step):
                 res = self._run_chain(task, item.step, payload)
             with self._cv:
-                self.results.append(TaskResult(
-                    task.name, item.step, res,
-                    threading.current_thread().name,
-                    time.perf_counter() - t0))
+                if res is not _DEGRADED:
+                    self.results.append(TaskResult(
+                        task.name, item.step, res,
+                        threading.current_thread().name,
+                        time.perf_counter() - t0))
                 self._finished += 1
                 self._cv.notify_all()
         except BaseException as e:  # noqa: BLE001 - keep workers alive
@@ -470,7 +590,8 @@ class PipelineRuntime:
         except BaseException as e:  # noqa: BLE001 - latch must always fire
             item.group.complete(item.shard, None, e)
         else:
-            item.group.complete(item.shard, res)
+            item.group.complete(item.shard,
+                                None if res is _DEGRADED else res)
 
     # -- loop side ------------------------------------------------------------
 
@@ -486,6 +607,13 @@ class PipelineRuntime:
 
     def _fire(self, step: int, task: PipelineTask,
               provider: Callable[[], Any]) -> None:
+        if task.name in self.degraded:
+            # graceful degradation: an exhausted sink sheds firings instead
+            # of crashing the loop; the dropped count is reported
+            with self._lock:
+                self.degraded[task.name]["dropped"] += 1
+            self.telemetry.count(f"sink/degraded_drop/{task.name}")
+            return
         pipelined = (task.pipelined and task.placement is not Placement.SYNC
                      and task.shards == 1)
         if (pipelined and task.backpressure == "drop"
@@ -506,14 +634,17 @@ class PipelineRuntime:
         if pipelined:
             # two-phase: the loop pays only the copy dispatch; the consumer
             # materializes (handoff/materialize) off the critical path.
+            t0 = time.perf_counter()
             with self.telemetry.span("handoff/dispatch", step=step,
                                      task=task.name):
                 pending = PendingHandoff(
                     _start_d2h(payload, snapshot=task.snapshot), task.handoff)
+            self._note_budget(task, time.perf_counter() - t0)
             self._enqueue(step, task, [pending])
             return
         # blocking hand-off: SYNC placement, non-pipelined tasks, and sharded
         # firings (a pending token cannot be split) materialize on the loop.
+        t0 = time.perf_counter()
         with self.telemetry.span("step/handoff", step=step, task=task.name):
             payload = task.handoff(_start_d2h(payload))
         pieces = split_payload(payload, task.shards)
@@ -521,6 +652,24 @@ class PipelineRuntime:
             self._run_sync(step, task, pieces)
         else:
             self._enqueue(step, task, pieces)
+        self._note_budget(task, time.perf_counter() - t0)
+
+    def _note_budget(self, task: PipelineTask, cost_s: float) -> None:
+        """Wall-clock Adaptive: widen the firing cadence when the
+        loop-blocking cost of a firing (copy dispatch, blocking hand-off,
+        sync in-situ work) stays over ``task.budget_s`` for ``adapt_after``
+        consecutive firings."""
+        if task.budget_s is None:
+            return
+        name = task.name
+        if cost_s <= task.budget_s:
+            self._budget_over[name] = 0
+            return
+        self._budget_over[name] += 1
+        if self._budget_over[name] >= task.adapt_after:
+            self._budget_over[name] = 0
+            if self.widen_every(name):
+                self.telemetry.count(f"budget/adapt/{name}")
 
     def _run_sync(self, step: int, task: PipelineTask, pieces: list) -> None:
         t0 = time.perf_counter()
@@ -539,6 +688,8 @@ class PipelineRuntime:
                 res = group.results
             else:
                 res = self._run_chain(task, step, pieces[0])
+        if res is _DEGRADED:
+            return
         with self._lock:
             self.results.append(TaskResult(
                 task.name, step, res, threading.current_thread().name,
@@ -565,10 +716,7 @@ class PipelineRuntime:
                     self._pressure[task.name] += 1
                     if self._pressure[task.name] >= task.adapt_after:
                         self._pressure[task.name] = 0
-                        new = min(self._every[task.name] * 2,
-                                  task.adapt_max_every)
-                        if new != self._every[task.name]:
-                            self._every[task.name] = new
+                        if self.widen_every(task.name):
                             self.telemetry.count(
                                 f"backpressure/adapt/{task.name}")
                     self.staging.put(item)   # still deliver this firing
@@ -607,6 +755,8 @@ class PipelineRuntime:
         rep["staging_puts"] = self.staging.puts
         rep["drops"] = dict(self.drops)
         rep["effective_every"] = {n: self._every[n] for n in self._tasks}
+        rep["retries"] = dict(self.retry_counts)
+        rep["degraded"] = {n: dict(d) for n, d in self.degraded.items()}
         return rep
 
 

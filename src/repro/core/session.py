@@ -10,12 +10,12 @@ checkpointing, serving snapshots, benchmark probes) is one *plan*:
             (``grads``, ``train_state``, ``kv_pages``, ...)
   triggers  when a task fires: ``Every(n)`` steps, ``When(predicate)``,
             ``Interval(seconds)`` of wall clock, or ``Adaptive(n)``
-            (backpressure-widened every-N) — replacing scattered
-            ``every=`` ints
+            (backpressure- and, with ``budget_s=``, wall-clock-widened
+            every-N) — replacing scattered ``every=`` ints
   tasks     what runs: an explicit ``device_stage -> handoff ->
             host_stages -> sink`` chain, or a registered *preset*
             (``checkpoint``, ``grad_health``, ``spectra``,
-            ``serve_snapshot``)
+            ``serve_snapshot``, ``fault``)
 
 A plan is validated at construction (errors name the offending
 stream/task) and is loadable from a plain dict — and therefore from
@@ -105,15 +105,25 @@ class Adaptive:
     """Backpressure-adaptive every-N: starts at ``n``; under sustained
     staging-ring pressure the runtime doubles the *effective* period (up to
     ``max_every``) instead of stalling the producer — the paper's F3
-    mitigation as a trigger."""
+    mitigation as a trigger.
+
+    ``budget_s`` adds the wall-clock flavor: when the loop-blocking cost of
+    a firing (copy dispatch + blocking hand-off + sync in-situ work, as
+    measured by the runtime's telemetry spans) stays over the budget for
+    ``after`` consecutive firings, the effective period widens too — the
+    straggler policy's "shed in-situ load before replacing the host" knob.
+    """
     n: int = 1
     max_every: int = 64
-    after: int = 2            # consecutive full-ring firings before widening
+    after: int = 2            # consecutive over-budget/full-ring firings
+    budget_s: Optional[float] = None
 
     def to_dict(self) -> dict:
-        return {"trigger": {"kind": "adaptive", "n": self.n,
-                            "max_every": self.max_every,
-                            "after": self.after}}
+        d = {"kind": "adaptive", "n": self.n,
+             "max_every": self.max_every, "after": self.after}
+        if self.budget_s is not None:
+            d["budget_s"] = self.budget_s
+        return {"trigger": d}
 
 
 @dataclass(frozen=True)
@@ -148,9 +158,11 @@ def _trigger_from_dict(name: str, spec: Mapping[str, Any]) -> Trigger:
     if kind == "every":
         return Every(int(spec.get("n", 1)))
     if kind == "adaptive":
+        budget = spec.get("budget_s")
         return Adaptive(int(spec.get("n", 1)),
                         max_every=int(spec.get("max_every", 64)),
-                        after=int(spec.get("after", 2)))
+                        after=int(spec.get("after", 2)),
+                        budget_s=None if budget is None else float(budget))
     if kind == "interval":
         return Interval(float(spec["seconds"]))
     raise PlanError(f"task {name!r}: unknown trigger kind {kind!r} "
@@ -191,6 +203,10 @@ class TaskSpec:
                       materialize on the pool); ``False`` restores the
                       blocking hand-off.
     ``snapshot``      donation-proof device-side copy at dispatch.
+    ``retries``       transient-sink-failure retry count (None = runtime
+                      default); exhausted retries degrade the task instead
+                      of raising (see ``PipelineTask.retries``).
+    ``retry_backoff_s``  base of the capped exponential retry backoff.
     """
     name: str
     stream: str
@@ -206,6 +222,8 @@ class TaskSpec:
     shards: int = 1
     pipelined: bool = True
     snapshot: bool = True
+    retries: Optional[int] = None
+    retry_backoff_s: Optional[float] = None
 
     def resolved_backpressure(self) -> str:
         if self.backpressure is not None:
@@ -232,6 +250,10 @@ class TaskSpec:
             d["pipelined"] = False
         if not self.snapshot:
             d["snapshot"] = False
+        if self.retries is not None:
+            d["retries"] = self.retries
+        if self.retry_backoff_s is not None:
+            d["retry_backoff_s"] = self.retry_backoff_s
         return d
 
 
@@ -254,19 +276,24 @@ def _task_from_dict(name: str, spec: Mapping[str, Any]) -> TaskSpec:
                 f"task {name!r}: unknown placement {placement!r} "
                 f"(expected one of {[p.value for p in Placement]})") from None
     known = {"stream", "preset", "options", "backpressure", "shards",
-             "pipelined", "snapshot"}
+             "pipelined", "snapshot", "retries", "retry_backoff_s"}
     unknown = set(spec) - known
     if unknown:
         raise PlanError(f"task {name!r}: unknown field(s) {sorted(unknown)}")
     if "stream" not in spec:
         raise PlanError(f"task {name!r}: missing required field 'stream'")
+    retries = spec.get("retries")
+    backoff = spec.get("retry_backoff_s")
     return TaskSpec(name=name, stream=spec["stream"], trigger=trigger,
                     placement=placement, preset=spec.get("preset"),
                     options=dict(spec.get("options", {})),
                     backpressure=spec.get("backpressure"),
                     shards=int(spec.get("shards", 1)),
                     pipelined=bool(spec.get("pipelined", True)),
-                    snapshot=bool(spec.get("snapshot", True)))
+                    snapshot=bool(spec.get("snapshot", True)),
+                    retries=None if retries is None else int(retries),
+                    retry_backoff_s=None if backoff is None
+                    else float(backoff))
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +409,50 @@ def _serve_snapshot_preset(spec: TaskSpec) -> dict:
             "store": store}
 
 
+@register_preset("fault")
+def _fault_preset(spec: TaskSpec) -> dict:
+    """Failure-aware run: heartbeats + straggler EWMA + live mitigation.
+
+    Each firing feeds a :class:`~repro.distributed.fault.FaultController`
+    with the emitted health payload (``{"host": h, "step_s": s}``,
+    ``{"hosts": {h: s}}``, or a bare ``{host: step_s}`` mapping). The
+    controller runs on the session's injected monotonic clock (``attach``),
+    declares hosts missing ``grace_s`` seconds of beats failed, and applies
+    :meth:`StragglerMonitor.mitigation` live — shedding in-situ load first
+    (``Session.shed_insitu`` widens every other task's cadence) before
+    flagging a host for replacement at the next checkpoint boundary.
+    :meth:`Session.report` carries the controller's state under ``fault``.
+
+    Options: ``hosts`` (required — the participating host ids), ``grace_s``
+    (heartbeat grace, default 30), ``alpha`` (EWMA smoothing, default 0.2),
+    ``factor`` (straggler threshold x median, default 1.5).
+    """
+    from repro.distributed.fault import FaultController
+
+    known = {"hosts", "grace_s", "alpha", "factor"}
+    unknown = set(spec.options) - known
+    if unknown:
+        raise PlanError(
+            f"task {spec.name!r}: unknown fault option(s) "
+            f"{sorted(unknown)} (known: {sorted(known)})")
+    hosts = spec.options.get("hosts")
+    if not hosts:
+        raise PlanError(
+            f"task {spec.name!r}: fault preset requires "
+            "options={'hosts': [...]} (the participating host ids)")
+    ctrl = FaultController(
+        [int(h) for h in hosts],
+        grace_s=float(spec.options.get("grace_s", 30.0)),
+        alpha=float(spec.options.get("alpha", 0.2)),
+        factor=float(spec.options.get("factor", 1.5)))
+
+    def sink(step: int, payload: Any):
+        return ctrl.ingest(step, payload)
+
+    return {"sink": sink, "report": ctrl.report, "controller": ctrl,
+            "attach": lambda session: ctrl.attach(session, spec.name)}
+
+
 # ---------------------------------------------------------------------------
 # The plan
 # ---------------------------------------------------------------------------
@@ -444,6 +515,19 @@ class InSituPlan:
                 raise PlanError(
                     f"task {t.name!r}: Interval seconds must be > 0, "
                     f"got {t.trigger.seconds}")
+            if (isinstance(t.trigger, Adaptive)
+                    and t.trigger.budget_s is not None
+                    and t.trigger.budget_s <= 0):
+                raise PlanError(
+                    f"task {t.name!r}: Adaptive budget_s must be > 0, "
+                    f"got {t.trigger.budget_s}")
+            if t.retries is not None and t.retries < 0:
+                raise PlanError(
+                    f"task {t.name!r}: retries must be >= 0, got {t.retries}")
+            if t.retry_backoff_s is not None and t.retry_backoff_s < 0:
+                raise PlanError(
+                    f"task {t.name!r}: retry_backoff_s must be >= 0, "
+                    f"got {t.retry_backoff_s}")
             if (isinstance(t.trigger, Adaptive) and t.backpressure is not None
                     and t.backpressure != "adapt"):
                 raise PlanError(
@@ -623,6 +707,9 @@ class Session:
         self._task_stream: dict[str, str] = {}
         self._reporters: dict[str, Callable[[], Mapping[str, Any]]] = {}
         self._stores: dict[str, Any] = {}
+        self._controllers: dict[str, Any] = {}
+        self._ckpt_meta: Optional[dict] = None
+        self._remesh = None               # ElasticRestore after elastic load
         self._by_stream: dict[str, list[_Binding]] = {
             s.name: [] for s in plan.streams}
         for spec in plan.tasks:
@@ -645,11 +732,18 @@ class Session:
             self._reporters[spec.name] = pieces["report"]
         if pieces.get("store") is not None:
             self._stores[spec.name] = pieces["store"]
+        if pieces.get("controller") is not None:
+            self._controllers[spec.name] = pieces["controller"]
         session_gated = isinstance(spec.trigger, (When, Interval))
         every = (spec.trigger.n
                  if isinstance(spec.trigger, (Every, Adaptive)) else 1)
         adapt = (spec.trigger if isinstance(spec.trigger, Adaptive)
                  else Adaptive())
+        extra: dict[str, Any] = {}
+        if spec.retries is not None:
+            extra["retries"] = spec.retries
+        if spec.retry_backoff_s is not None:
+            extra["retry_backoff_s"] = spec.retry_backoff_s
         task = PipelineTask(
             name=spec.name,
             source=f"{spec.stream}::{spec.name}",
@@ -665,10 +759,16 @@ class Session:
             backpressure=spec.resolved_backpressure(),
             adapt_after=adapt.after,
             adapt_max_every=adapt.max_every,
+            budget_s=adapt.budget_s,
+            **extra,
         )
         self.runtime.register(task)
         self._by_stream[spec.stream].append(
             _Binding(spec, task.source, session_gated))
+        if pieces.get("attach") is not None:
+            # presets that need the live session (clock adoption, shedding
+            # surface) get it only after their task is registered
+            pieces["attach"](self)
 
     def _bind_checkpoint(self, spec: TaskSpec) -> None:
         """Fold a CheckpointManager into the session as a declared task.
@@ -722,7 +822,7 @@ class Session:
                 if isinstance(b.spec.trigger, (Every, Adaptive)):
                     if step % b.spec.trigger.n:
                         continue
-                b.mgr.save(step, provider())
+                b.mgr.save(step, provider(), meta=self._ckpt_meta)
                 continue
             providers[b.source] = provider
         if providers:
@@ -762,6 +862,12 @@ class Session:
         return frozenset(self._by_stream)
 
     @property
+    def clock(self) -> Callable[[], float]:
+        """The session's monotonic clock (injected or ``time.monotonic``);
+        Interval triggers and the fault subsystem read the same source."""
+        return self._clock
+
+    @property
     def telemetry(self) -> Telemetry:
         return self.runtime.telemetry
 
@@ -783,6 +889,46 @@ class Session:
                 f"{sorted(self._stores)})")
         return self._stores[task]
 
+    def fault_controller(self, task: Optional[str] = None) -> Any:
+        """The FaultController behind a ``fault`` task. ``task=None`` picks
+        the only one; raises :class:`PlanError` when the plan declares none
+        (or several, without naming which)."""
+        if task is None:
+            if len(self._controllers) != 1:
+                raise PlanError(
+                    "plan declares "
+                    f"{len(self._controllers)} fault controller(s) — name "
+                    f"the task (declared: {sorted(self._controllers)})")
+            return next(iter(self._controllers.values()))
+        if task not in self._controllers:
+            raise PlanError(
+                f"task {task!r} has no fault controller (declared: "
+                f"{sorted(self._controllers)})")
+        return self._controllers[task]
+
+    def shed_insitu(self, exclude: Sequence[str] = ()) -> dict[str, int]:
+        """Shed in-situ load: double every bound task's effective firing
+        period (the paper's "reduce p_i on contended nodes" mitigation).
+
+        Returns ``{task: new_effective_every}`` for the tasks that actually
+        widened (tasks at their cap don't). The checkpoint task is never
+        shed — its saves are session-gated, so a widened runtime period
+        would silently drop them — and ``exclude`` skips more (the fault
+        task excludes itself so mitigation doesn't starve its own
+        heartbeats).
+        """
+        skip = set(exclude)
+        if self.checkpoint is not None:
+            skip.add("checkpoint")
+        widened: dict[str, int] = {}
+        for task in self.runtime.tasks:
+            if task.name in skip:
+                continue
+            if self.runtime.widen_every(task.name):
+                widened[task.name] = self.runtime.effective_every(task.name)
+                self.runtime.telemetry.count(f"fault/shed/{task.name}")
+        return widened
+
     def stream_of(self, task: str) -> Optional[str]:
         """The stream a task is bound to (None for tasks the plan doesn't
         know, e.g. registered directly on a wrapped runtime)."""
@@ -795,12 +941,85 @@ class Session:
 
     # -- checkpoint passthrough ----------------------------------------------
 
+    def set_checkpoint_meta(self, meta: Optional[Mapping[str, Any]] = None,
+                            *, mesh: Any = None) -> None:
+        """Attach run metadata to every subsequent checkpoint save.
+
+        ``mesh`` records the device-mesh geometry under ``meta["mesh"]``
+        (``{"shape": [...], "axes": [...]}``) — what
+        ``restore(elastic=True)`` reads back to plan the remesh when the
+        caller doesn't pass ``old_shape``/``axis_names`` explicitly.
+        """
+        m = dict(meta) if meta else {}
+        if mesh is not None:
+            m["mesh"] = {"shape": [int(s) for s in mesh.devices.shape],
+                         "axes": [str(a) for a in mesh.axis_names]}
+        self._ckpt_meta = m or None
+
     def restore(self, template: PyTree, step: Optional[int] = None,
-                shardings: Optional[PyTree] = None) -> tuple[int, PyTree]:
-        """Restore from the plan's checkpoint task (elastic re-placement)."""
+                shardings: Optional[PyTree] = None, *,
+                elastic: bool = False,
+                devices: Optional[Sequence[Any]] = None,
+                old_shape: Optional[Sequence[int]] = None,
+                axis_names: Optional[Sequence[str]] = None,
+                make_shardings: Optional[Callable[[Any], PyTree]] = None,
+                ) -> tuple[int, PyTree]:
+        """Restore from the plan's checkpoint task.
+
+        ``elastic=True`` is the failure-recovery path: compute the largest
+        mesh that fits the surviving ``devices`` (default: all visible
+        devices) via :func:`~repro.distributed.fault.plan_elastic_remesh`,
+        then read the v2 packed-shard checkpoint re-placed under that
+        shrunken mesh — TP shards merge by the plan's
+        ``model_merge_factor`` implicitly, because v2 leaves are stored
+        logically complete and re-placement under the new shardings *is*
+        the merge. No full blocking restore onto the old grid happens.
+
+        The old mesh geometry comes from ``old_shape``/``axis_names`` or,
+        by default, from the checkpoint's recorded meta (saves made after
+        :meth:`set_checkpoint_meta`\\ ``(mesh=...)``). ``make_shardings``
+        maps the new mesh to the restore shardings (falling back to any
+        explicit ``shardings``/host placement). The resolved plan, mesh,
+        and step are kept on :attr:`remesh`.
+        """
         if self.checkpoint is None:
             raise PlanError("plan declares no checkpoint task to restore from")
-        return self.checkpoint.restore(template, step, shardings)
+        if not elastic:
+            return self.checkpoint.restore(template, step, shardings)
+        import jax
+        import numpy as np
+        from repro.distributed.fault import (ElasticRestore,
+                                             plan_elastic_remesh)
+        devs = list(devices) if devices is not None else list(jax.devices())
+        if old_shape is None or axis_names is None:
+            meta = self.checkpoint.read_meta(step) or {}
+            mesh_meta = meta.get("mesh")
+            if not mesh_meta:
+                raise PlanError(
+                    "elastic restore needs the old mesh geometry — pass "
+                    "old_shape/axis_names, or save checkpoints after "
+                    "Session.set_checkpoint_meta(mesh=...)")
+            if old_shape is None:
+                old_shape = tuple(mesh_meta["shape"])
+            if axis_names is None:
+                axis_names = tuple(mesh_meta["axes"])
+        plan = plan_elastic_remesh(tuple(old_shape), tuple(axis_names),
+                                   len(devs))
+        mesh = jax.sharding.Mesh(
+            np.asarray(devs[:plan.new_device_count],
+                       dtype=object).reshape(plan.new_shape),
+            plan.axis_names)
+        if make_shardings is not None:
+            shardings = make_shardings(mesh)
+        step, state = self.checkpoint.restore(template, step, shardings)
+        self._remesh = ElasticRestore(plan=plan, mesh=mesh, step=step)
+        return step, state
+
+    @property
+    def remesh(self):
+        """The :class:`~repro.distributed.fault.ElasticRestore` resolved by
+        the last ``restore(elastic=True)`` (None before)."""
+        return self._remesh
 
     def latest_checkpoint_step(self) -> Optional[int]:
         if self.checkpoint is None:
@@ -865,6 +1084,17 @@ class Session:
             # and chain depth) ride the task's entry
             if name in rep["tasks"]:
                 rep["tasks"][name].update(dict(reporter()))
+        for name, entry in rep["tasks"].items():
+            if name in rep.get("degraded", {}):
+                entry["degraded"] = dict(rep["degraded"][name])
+        if self._controllers:
+            # failed hosts / straggler EWMA / applied mitigations, flat when
+            # the plan declares one fault task (the common case)
+            if len(self._controllers) == 1:
+                rep["fault"] = next(iter(self._controllers.values())).report()
+            else:
+                rep["fault"] = {n: c.report()
+                                for n, c in self._controllers.items()}
         rep["errors"] = [
             {"task": n, "stream": self.stream_of(n) or "?", "step": s,
              "error": f"{type(e).__name__}: {e}"}

@@ -25,14 +25,18 @@ See ``repro/core/session.py`` for the full semantics. The legacy entry
 points (``InSituEngine``, ``run_workflow``, ``run_pipeline``) remain as
 deprecation shims in ``repro.core``.
 """
-from repro.core.runtime import FanoutStage, Placement, Stage
+from repro.core.runtime import (FanoutStage, Placement, Stage,
+                                TransientError)
 from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
                                 Interval, PlanError, Session, StreamSpec,
                                 TaskSpec, Trigger, When, preset_names,
                                 register_preset)
+from repro.distributed.fault import (ElasticRestore, FaultController,
+                                     plan_elastic_remesh)
 
 __all__ = [
-    "Adaptive", "Every", "FanoutStage", "InSituPlan", "InSituTaskError",
-    "Interval", "Placement", "PlanError", "Session", "Stage", "StreamSpec",
-    "TaskSpec", "Trigger", "When", "preset_names", "register_preset",
+    "Adaptive", "ElasticRestore", "Every", "FanoutStage", "FaultController",
+    "InSituPlan", "InSituTaskError", "Interval", "Placement", "PlanError",
+    "Session", "Stage", "StreamSpec", "TaskSpec", "TransientError", "Trigger",
+    "When", "plan_elastic_remesh", "preset_names", "register_preset",
 ]

@@ -296,12 +296,18 @@ def jit_train_step(cfg, mesh, step_cfg: StepConfig, shape, *, rules=None,
 
 def default_train_plan(*, insitu_mode: str = "async",
                        ckpt_dir: Optional[str] = None, ckpt_every: int = 20,
-                       analytics_every: int = 10, p_i: int = 2) -> dict:
+                       analytics_every: int = 10, p_i: int = 2,
+                       fault: bool = False,
+                       fault_hosts: Optional[list] = None,
+                       fault_grace_s: float = 30.0) -> dict:
     """The training loop's declarative in-situ plan, in plain-dict form.
 
     Two streams: ``grads`` (per-step gradient/param summaries) and
-    ``train_state`` (the full checkpointable state). Callers can load the
-    same shape from TOML/JSON and pass it to ``train_loop(plan=...)``.
+    ``train_state`` (the full checkpointable state). ``fault=True`` adds a
+    third, ``health`` (per-step heartbeat + step time), bound to the
+    ``fault`` preset — failed-host detection and straggler mitigation run
+    on it. Callers can load the same shape from TOML/JSON and pass it to
+    ``train_loop(plan=...)``.
     """
     plan: dict = {
         "streams": ["grads", "train_state"],
@@ -318,6 +324,16 @@ def default_train_plan(*, insitu_mode: str = "async",
             "every": ckpt_every, "placement": insitu_mode,
             "options": {"directory": ckpt_dir},
         }
+    if fault:
+        # sync + every=1: heartbeats must not be shed by backpressure, and
+        # mitigation decisions should land on the step that triggered them
+        plan["streams"].append("health")
+        plan["tasks"]["fault"] = {
+            "stream": "health", "preset": "fault", "every": 1,
+            "placement": "sync", "pipelined": False,
+            "options": {"hosts": list(fault_hosts or [0]),
+                        "grace_s": fault_grace_s},
+        }
     return plan
 
 
@@ -326,6 +342,7 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
                ckpt_every: int = 20, seed: int = 0,
                analytics_every: int = 10, p_i: int = 2,
                plan: Optional[Any] = None,
+               sink_faults: Optional[dict] = None,
                log: Callable[[str], None] = print) -> dict:
     """End-to-end training with the in-situ stack declared as a plan.
 
@@ -335,7 +352,8 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
     ``session.emit``. Pass ``plan`` (an ``InSituPlan`` or its dict form) to
     replace the default workflow wholesale; the legacy kwargs
     (``insitu_mode``/``ckpt_every``/``analytics_every``) parameterize the
-    default plan.
+    default plan. ``sink_faults`` maps task names to fault hooks installed
+    via ``PipelineRuntime.inject_sink_fault`` (transient-failure drills).
     """
     from repro.core import InSituPlan, Session, Telemetry
     from repro.data.pipeline import Prefetcher, batch_spec_for
@@ -362,6 +380,11 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
         # ONE session: analytics and checkpointing share the staging ring
         # and the p_i worker pool (the paper's single p_o/p_i split).
         with Session(plan, telemetry=tm, raise_on_error=True) as session:
+            for task_name, hook in (sink_faults or {}).items():
+                session.runtime.inject_sink_fault(task_name, hook)
+            # record the mesh geometry with every save so a later
+            # restore(elastic=True) can plan the remesh from the manifest
+            session.set_checkpoint_meta(mesh=mesh)
             if session.latest_checkpoint_step() is not None:
                 start, state = session.restore(state)
                 log(f"resumed from step {start}")
@@ -377,8 +400,13 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
                 with session.step_span(i):
                     state, metrics = jitted(state, batch)
                     loss = float(metrics["loss"])
-                mon.observe(0, time.perf_counter() - t0)
+                step_s = time.perf_counter() - t0
+                mon.observe(0, step_s)
                 losses.append(loss)
+                if "health" in session.streams:
+                    # single-process loop: host 0's beat + step time; a
+                    # multi-host launcher emits {"hosts": {h: s}} instead
+                    session.emit("health", i, {"host": 0, "step_s": step_s})
                 # a custom plan may declare only a subset of the default
                 # streams — offer each payload only where declared
                 if "grads" in session.streams:
