@@ -29,7 +29,7 @@ def main() -> None:
                             fig09_compression_scaling,
                             fig10_12_qe_checkpoint, handoff_overlap,
                             lossy_ratio, roofline, serving_throughput,
-                            snapshot_delta, tab2_codecs)
+                            snapshot_delta, stream_sink, tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -49,6 +49,7 @@ def main() -> None:
         ("snapshot_delta", snapshot_delta.run),
         ("serving", serving_throughput.run),
         ("fault", fault_recovery.run),
+        ("stream_sink", stream_sink.run),
     ]
     print("name,us_per_call,derived")
     failures = []
@@ -65,7 +66,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
     tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving",
-               "fault")
+               "fault", "stream_sink")
     if not quick and all(name in results for name in tracked):
         # only an unfiltered --full run refreshes the tracked perf artifact
         # (quick-mode numbers are not comparable across PRs, and a --only
@@ -75,6 +76,7 @@ def main() -> None:
         artifact["snapshot_delta"] = results["snapshot_delta"]
         artifact["serving"] = results["serving"]
         artifact["fault"] = results["fault"]
+        artifact["stream_sink"] = results["stream_sink"]
         handoff_overlap.write_artifact(artifact)
         print(f"# wrote {handoff_overlap.ARTIFACT}")
     elif not quick and args.only:

@@ -1,0 +1,187 @@
+"""Streaming transport vs file staging: throughput and non-blocking-ness.
+
+The openPMD/ADIOS2 argument (PAPERS.md) for replacing file-based staging
+with streaming pipelines only holds if (a) the wire path is not the
+bottleneck and (b) a slow consumer cannot stall the producing loop. This
+benchmark measures both for ``repro.core.transport``:
+
+  * **throughput** — the same framed payloads through a ``FileSink``
+    (atomic tmp -> fsync -> rename per frame, the file-staging baseline)
+    vs a ``StreamSink`` over localhost TCP to a draining ``StreamSource``.
+    Gate: stream within 2x of file throughput (it is usually far faster —
+    the file path pays two fsyncs per frame).
+  * **slow consumer, drop policy** — an async in-situ task whose sink
+    streams to a consumer that drains *slower than the producer fires*,
+    under ``backpressure="drop"``. The bounded staging ring sheds firings
+    instead of blocking, so the train loop's wall clock must stay at the
+    device time: gate is < 10% stall overhead, with the shed firings
+    counted (dropped + degraded frames are *visible*, never silent).
+
+The metrics dict lands in ``BENCH_runtime.json`` under ``stream_sink`` on
+``--full`` runs of ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import transport
+from repro.core.transport import FileSink, StreamSink, StreamSource
+
+
+def _drain(source: StreamSource, stop: threading.Event,
+           delay_s: float = 0.0, counter: list = None) -> None:
+    while not stop.is_set():
+        frame = source.recv_frame(timeout=0.2)
+        if frame is None:
+            continue
+        if counter is not None:
+            counter.append(frame.seq)
+        if delay_s:
+            time.sleep(delay_s)
+
+
+def _throughput(quick: bool) -> dict:
+    n_frames = 16 if quick else 64
+    payload = {"slab": common.turbulence_field(1 << (18 if quick else 20))}
+
+    with tempfile.TemporaryDirectory() as d:
+        sink = FileSink(d, stream="bench")
+        t0 = time.perf_counter()
+        for i in range(n_frames):
+            sink.write(i, payload)
+        sink.close()
+        file_s = time.perf_counter() - t0
+        file_mb = sink.bytes_written / 1e6
+
+    source = StreamSource(port=0)
+    stop = threading.Event()
+    drained: list = []
+    th = threading.Thread(target=_drain, args=(source, stop, 0.0, drained),
+                          daemon=True)
+    th.start()
+    sink = transport.connect(source.address, stream="bench")
+    t0 = time.perf_counter()
+    for i in range(n_frames):
+        sink.write(i, payload)
+    sink.flush()
+    stream_s = time.perf_counter() - t0
+    stream_mb = sink.bytes_written / 1e6
+    deadline = time.time() + 10
+    while len(drained) < n_frames and time.time() < deadline:
+        time.sleep(0.01)
+    sink.close()
+    stop.set()
+    th.join(timeout=2)
+    source.close()
+    assert len(drained) == n_frames, \
+        f"consumer drained {len(drained)}/{n_frames} frames"
+
+    file_mb_s = file_mb / file_s
+    stream_mb_s = stream_mb / stream_s
+    common.row("stream_sink/file_mb_s", file_s / n_frames * 1e6,
+               f"{file_mb_s:.0f}MB/s")
+    common.row("stream_sink/stream_mb_s", stream_s / n_frames * 1e6,
+               f"{stream_mb_s:.0f}MB/s")
+    return {"n_frames": n_frames, "frame_mb": file_mb / n_frames,
+            "file_mb_s": file_mb_s, "stream_mb_s": stream_mb_s,
+            "stream_vs_file_x": stream_mb_s / file_mb_s}
+
+
+def _slow_consumer(quick: bool) -> dict:
+    """Async task streaming to a consumer slower than the firing cadence,
+    drop policy: the *loop body* must run at device speed, shedding
+    visibly. (End-of-run drain is measured separately — waiting for
+    in-flight frames at shutdown is correct, stalling the loop is not.)"""
+    n_steps = 24 if quick else 80
+    step_s = 0.01
+    consumer_delay_s = 4 * step_s          # drains 4x slower than it fires
+    payload = common.turbulence_field(1 << 16)
+
+    source = StreamSource(port=0, check_gaps=False)
+    stop = threading.Event()
+    drained: list = []
+    th = threading.Thread(
+        target=_drain, args=(source, stop, consumer_delay_s, drained),
+        daemon=True)
+    th.start()
+    sink = transport.connect(source.address, stream="x")
+
+    plan = common.InSituPlan(
+        streams=["x"],
+        tasks=[common.TaskSpec(name="t", stream="x", sink=sink,
+                               placement=common.InSituMode.ASYNC,
+                               trigger=common.Every(1),
+                               backpressure="drop")],
+        workers=1, staging_capacity=2)
+    session = common.Session(plan)
+    dev = common.DeviceSim(step_s)
+    with session:
+        t0 = time.perf_counter()
+        for i in range(n_steps):
+            with session.step_span(i):
+                dev()
+            session.emit("x", i, lambda: payload)
+        loop_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+    drain_s = time.perf_counter() - t0     # context exit = flush workers
+    rep = session.report()
+    sink.close()
+    stop.set()
+    th.join(timeout=2)
+    source.close()
+
+    ideal_s = n_steps * step_s
+    stall_frac = max(0.0, loop_s - ideal_s) / ideal_s
+    shed = rep.get("drops", {}).get("t", 0)
+    common.row("stream_sink/slow_consumer_stall",
+               stall_frac * ideal_s / n_steps * 1e6,
+               f"stall_frac={stall_frac:.3f} shed={shed}")
+    return {"n_steps": n_steps, "device_step_s": step_s,
+            "consumer_delay_s": consumer_delay_s,
+            "loop_s": loop_s, "drain_s": drain_s, "ideal_s": ideal_s,
+            "stall_frac": stall_frac,
+            "fired": rep["n_results"], "shed": shed,
+            "consumer_got": len(drained)}
+
+
+def run(quick: bool = True) -> dict:
+    tp = _throughput(quick)
+    slow = _slow_consumer(quick)
+
+    # gates: the wire must not be the bottleneck, and a slow consumer
+    # must cost the train loop (almost) nothing under the drop policy
+    assert tp["stream_vs_file_x"] >= 0.5, (
+        f"stream throughput fell below half of file staging: "
+        f"{tp['stream_mb_s']:.0f} vs {tp['file_mb_s']:.0f} MB/s")
+    limit = 0.25 if quick else 0.10   # CI-machine jitter headroom in quick
+    assert slow["stall_frac"] <= limit, (
+        f"slow consumer stalled the loop: loop {slow['loop_s']:.3f}s vs "
+        f"ideal {slow['ideal_s']:.3f}s (stall_frac {slow['stall_frac']:.3f})")
+    assert slow["shed"] + slow["consumer_got"] >= slow["fired"] or \
+        slow["consumer_got"] > 0, "shedding happened but nothing arrived"
+
+    return {"quick": quick, "throughput": tp, "slow_consumer": slow}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    m = run(quick=not args.full)
+    print(json.dumps(m, indent=2, sort_keys=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(m, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,16 @@ compressed checkpointing — declared as one plain-dict ``InSituPlan``
 fails with ``TransientError`` on a schedule (recovers under retry early,
 exhausts retries later), and the run must complete anyway with the
 degradation named in the session report.
+
+``--stream-drill`` is the network version of the same drill: analytics
+stream over a real TCP transport (``"to": "tcp://..."`` in the plan) to an
+in-process consumer, with the connection severed mid-run — the sink must
+reconnect transparently, the consumer must keep receiving frames, and the
+train loop must never crash. The same ``inject_sink_fault`` hook drives
+both drills; transport sinks are just sinks.
 """
 import argparse
+import threading
 
 from repro.core.runtime import TransientError
 from repro.launch.train import train_loop
@@ -44,6 +52,75 @@ def make_analytics_fault():
     return fault
 
 
+def run_stream_drill(args) -> None:
+    """Network-fault drill: analytics over TCP with a mid-run connection cut.
+
+    An in-process consumer (``repro.launch.consume``) listens on localhost;
+    the analytics preset forwards every report through a ``StreamSink``.
+    A fault hook severs the TCP connection on the drill step — NOT by
+    raising, but by ``drop_connection()`` on the live transport sink, the
+    same thing a consumer crash or network blip does — and the next write
+    must reconnect transparently. The run passes when the loop completes,
+    the sink reports a reconnect, and the consumer received frames on both
+    sides of the cut.
+    """
+    from repro.core import transport
+    from repro.launch.consume import consume_loop
+
+    source = transport.StreamSource(port=0)
+    done: dict = {}
+
+    def consume() -> None:
+        # long start grace: the producer only connects after jit compile
+        done["report"] = consume_loop(source, idle_timeout_s=3.0,
+                                      start_grace_s=300.0,
+                                      log=lambda *_: None)
+
+    consumer = threading.Thread(target=consume, daemon=True)
+    consumer.start()
+
+    plan = {
+        "streams": ["grads"],
+        "workers": 2,
+        "tasks": {
+            "analytics": {"stream": "grads", "preset": "grad_health",
+                          "every": 5, "placement": "sync",
+                          "retries": 3, "retry_backoff_s": 0.01,
+                          "options": {"to": source.address}},
+        },
+    }
+
+    drill_step = 5 * (args.steps // 10 or 1)  # an analytics firing mid-run
+    grabbed: dict = {}
+
+    def grab_transport(session) -> None:
+        grabbed["sink"] = session.transport_of("analytics")
+
+    def cut_connection(step: int) -> None:
+        if step == drill_step:
+            grabbed["sink"].drop_connection()
+
+    out = train_loop(args.arch, steps=args.steps, smoke=not args.full_135m,
+                     plan=plan, on_session=grab_transport,
+                     sink_faults={"analytics": cut_connection})
+    consumer.join(timeout=10.0)
+
+    rep = out["session_report"]
+    tr = rep["tasks"]["analytics"]["transport"]
+    got = done.get("report", {})
+    print(f"\nstream drill: {tr['frames']} frames "
+          f"({tr['bytes'] / 1e3:.1f}KB) over {tr['sink']}, "
+          f"{tr['reconnects']} connects; consumer saw "
+          f"{got.get('frames', 0)} frames")
+    assert not rep["errors"], f"no task may raise: {rep['errors']}"
+    assert tr["reconnects"] >= 2, (
+        f"expected a reconnect after the cut, got {tr['reconnects']}")
+    assert got.get("frames", 0) >= tr["frames"] - 1, (
+        "consumer missed frames that were reported sent")
+    print("stream drill passed: connection cut healed, no frames lost, "
+          "loop never stalled")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
@@ -55,7 +132,14 @@ def main() -> None:
                     help="use the full config (needs accelerator memory)")
     ap.add_argument("--inject-sink-faults", action="store_true",
                     help="transient-IO drill on the analytics sink")
+    ap.add_argument("--stream-drill", action="store_true",
+                    help="network drill: analytics over TCP with a mid-run "
+                         "connection cut (must reconnect, never crash)")
     args = ap.parse_args()
+
+    if args.stream_drill:
+        run_stream_drill(args)
+        return
 
     # the drill pins analytics SYNC so the fail/degrade/drop schedule is
     # deterministic (async workers may lag the loop by a few steps)

@@ -46,6 +46,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint import serialization as ser
+from repro.core import transport
 from repro.core.runtime import (FanoutStage, PipelineRuntime, PipelineTask,
                                 Placement, Stage)
 from repro.core.telemetry import Telemetry
@@ -79,6 +80,8 @@ class CheckpointConfig:
     format: int = ser.CHECKPOINT_FORMAT  # 2: packed shards; 1: file per leaf
     shard_count: int = 1              # v2: number of shard_NNN.bin files
     leaf_parallel: bool = True        # fan encode out per leaf on the pool
+    mirror: Optional[str] = None      # transport URL replicating committed
+                                      # steps (file:// | tcp:// | memory://)
 
     def __post_init__(self) -> None:
         if self.every < 1:
@@ -109,6 +112,9 @@ class CheckpointManager:
         # re-publish a copy stranded mid-commit (see ser.sweep_stale)
         ser.sweep_stale(cfg.directory)
         self.reports: list[ser.SaveReport] = []
+        self.mirror_stats = {"steps": 0, "frames": 0, "failures": 0}
+        self._mirror = (transport.connect(cfg.mirror, stream="checkpoint")
+                        if cfg.mirror else None)
         self._lock = threading.Lock()
         self._owns_runtime = runtime is None
         if runtime is None:
@@ -212,6 +218,7 @@ class CheckpointManager:
             entries = ser.write_encoded(tmp, payload["encoded"])
         ser.write_manifest(tmp, step, entries, payload["meta"])
         ser.commit(tmp, final)
+        self._mirror_committed(step, final)
         raw = sum(e["raw_bytes"] for e in entries.values())
         stored = sum(e["bytes"] for e in entries.values())
         report = ser.SaveReport(step, raw, stored, len(entries),
@@ -222,6 +229,29 @@ class CheckpointManager:
             # otherwise interleave list_steps()/rmtree
             self._retain_locked()
         return report
+
+    def _mirror_committed(self, step: int, final: str) -> None:
+        """Replicate a committed step through the secondary transport, one
+        CODEC_FILE frame per file with the manifest last (the consumer's
+        materialized copy honors the same publish-manifest-last protocol).
+
+        Mirroring is strictly after the local commit and *best-effort*: a
+        dead replica counts a failure in ``mirror_stats`` instead of
+        raising — a TransientError here would send the whole sink back
+        through the runtime's retry loop and re-commit an
+        already-committed checkpoint."""
+        if self._mirror is None:
+            return
+        try:
+            n = transport.send_directory(
+                self._mirror, step, final,
+                prefix=os.path.basename(final), stream="checkpoint")
+            with self._lock:
+                self.mirror_stats["steps"] += 1
+                self.mirror_stats["frames"] += n
+        except Exception:  # noqa: BLE001 - replication never blocks saves
+            with self._lock:
+                self.mirror_stats["failures"] += 1
 
     def _retain_locked(self) -> None:
         steps = sorted(self.list_steps())
@@ -284,6 +314,11 @@ class CheckpointManager:
     def finish(self) -> None:
         if self._owns_runtime:
             self.runtime.drain()
+        if self._mirror is not None:
+            try:
+                self._mirror.close()
+            except Exception:  # noqa: BLE001 - teardown must not raise
+                pass
 
     def wait_idle(self, timeout: float = 600.0) -> None:
         """Block until queued checkpoints are written (tests/end-of-run)."""

@@ -14,6 +14,10 @@ from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
                                 TaskSpec, When, preset_names, register_preset)
 from repro.core.staging import PendingHandoff, StagedItem, StagingBuffer
 from repro.core.telemetry import Telemetry
+from repro.core.transport import (CallableSink, FileSink, FileSource, Frame,
+                                  FrameCorruptError, MemorySink, Sink, Source,
+                                  StreamGapError, StreamSink, StreamSource,
+                                  TransportError, as_sink, connect)
 
 __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
            "FanoutStage", "PipelineRuntime", "PipelineTask", "Placement",
@@ -22,4 +26,8 @@ __all__ = ["InSituEngine", "InSituMode", "InSituTask", "run_workflow",
            "Adaptive", "Every", "InSituPlan", "InSituTaskError", "Interval",
            "PlanError", "Session", "StreamSpec", "TaskSpec", "When",
            "preset_names", "register_preset",
-           "PendingHandoff", "StagedItem", "StagingBuffer", "Telemetry"]
+           "PendingHandoff", "StagedItem", "StagingBuffer", "Telemetry",
+           "CallableSink", "FileSink", "FileSource", "Frame",
+           "FrameCorruptError", "MemorySink", "Sink", "Source",
+           "StreamGapError", "StreamSink", "StreamSource", "TransportError",
+           "as_sink", "connect"]

@@ -92,6 +92,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core import transport
 from repro.core.staging import (Closed, PendingHandoff, StagedItem,
                                 StagingBuffer)
 from repro.core.telemetry import Telemetry
@@ -270,8 +271,11 @@ class PipelineTask:
 
     ``source``        key into the providers dict passed to ``submit()``; the
                       provider is only called on steps where the task fires.
-    ``sink``          terminal consumer: ``sink(step, payload) -> result``;
-                      the result lands in ``runtime.results``.
+    ``sink``          terminal consumer: a :class:`repro.core.transport.Sink`
+                      (``write(step, payload) -> result``) or a legacy
+                      ``sink(step, payload)`` callable — ``register``
+                      normalizes callables through the ``CallableSink``
+                      shim. The result lands in ``runtime.results``.
     ``host_stages``   ordered ``Stage`` chain run before the sink (same
                       thread as the sink, per the placement).
     ``device_stage``  optional ``fn(step, payload) -> payload`` run *before*
@@ -387,6 +391,9 @@ class PipelineRuntime:
         """Add a pipeline to the schedule; new workloads start here."""
         if task.name in self._tasks:
             raise ValueError(f"task {task.name!r} already registered")
+        # one terminal protocol for every task: callables wear the
+        # CallableSink shim, transport sinks pass through untouched
+        task.sink = transport.as_sink(task.sink)
         self._tasks[task.name] = task
         self._every[task.name] = int(task.every)
         self._pressure[task.name] = 0
@@ -420,6 +427,19 @@ class PipelineRuntime:
             return False
         self._every[name] = new
         return True
+
+    def set_every(self, name: str, every: int) -> None:
+        """Set a task's effective firing period directly — the steering
+        channel's lever (a consumer retunes cadence mid-run); also resets
+        the adapt/budget pressure counters so the new cadence gets a fair
+        start."""
+        if name not in self._tasks:
+            raise ValueError(f"unknown task {name!r}")
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self._every[name] = int(every)
+        self._pressure[name] = 0
+        self._budget_over[name] = 0
 
     def inject_sink_fault(self, name: str,
                           fault: Optional[Callable[[int], Any]] = None) -> None:
@@ -498,7 +518,7 @@ class PipelineRuntime:
                 fault = self._sink_faults.get(task.name)
                 if fault is not None:
                     fault(step)
-                return task.sink(step, payload)
+                return task.sink.write(step, payload)
             except TransientError as e:
                 attempt += 1
                 if attempt > task.retries:
@@ -740,11 +760,19 @@ class PipelineRuntime:
         return True
 
     def drain(self, timeout: float = 600.0) -> None:
-        """Drain the ring and join workers (the non-overlapped tail)."""
+        """Drain the ring, join workers, close sinks (the non-overlapped
+        tail; transport-backed sinks flush and release their backend —
+        a StreamSink sends its BYE frame here)."""
         with self.telemetry.span("insitu/drain"):
             self.staging.close()
             for th in self._threads:
                 th.join(timeout=timeout)
+        for task in self._tasks.values():
+            try:
+                task.sink.flush()
+                task.sink.close()
+            except Exception:  # noqa: BLE001 - teardown must not raise
+                pass
 
     # -- reporting ------------------------------------------------------------
 

@@ -56,6 +56,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional, Sequence, Union
 
+from repro.core import transport
 from repro.core.runtime import (BACKPRESSURE_POLICIES, PipelineRuntime,
                                 PipelineTask, Placement, Stage,
                                 default_handoff)
@@ -328,30 +329,103 @@ def preset_names() -> list[str]:
     return sorted(set(_PRESETS) | {"checkpoint"})
 
 
+class _PresetSink(transport.Sink):
+    """The one terminal every preset shares (this used to be four
+    near-identical ``def sink(step, payload)`` closures): run the preset's
+    *transform* — its whole identity — and, when the plan declared a
+    transport (``options={"to": "tcp://…"}``), forward the result through
+    it. The transform's return value stays the task's result in
+    ``runtime.results``, so semantics match the old closures exactly.
+
+    A forward failure over a stream transport raises the runtime's
+    ``TransientError`` out of ``write`` — the task retries (re-running the
+    transform, so transforms must tolerate replay; all four presets do)
+    and degrades if the consumer stays gone, which is precisely the PR-7
+    contract extended to the network.
+    """
+
+    def __init__(self, spec: TaskSpec, transform: Callable[[int, Any], Any],
+                 forward_to: Optional[transport.Sink] = None) -> None:
+        super().__init__(stream=spec.stream)
+        self.transform = transform
+        self.forward_to = forward_to
+
+    def write(self, step: int, payload: Any, **_kw) -> Any:
+        result = self.transform(step, payload)
+        if self.forward_to is not None:
+            self.forward_to.write(
+                step, result if result is not None else payload)
+        self.frames_written += 1
+        return result
+
+    def write_frame(self, frame: transport.Frame) -> None:  # pragma: no cover
+        raise TypeError("_PresetSink is driven through write()")
+
+    def close(self) -> None:
+        if self.forward_to is not None:
+            self.forward_to.close()
+        super().close()
+
+
+def _terminal_pieces(spec: TaskSpec, transform: Callable[[int, Any], Any],
+                     *, known_options: Sequence[str] = (),
+                     forward: bool = True, **extra: Any) -> dict:
+    """Build a preset's chain pieces around the shared terminal.
+
+    Validates ``spec.options`` against ``known_options`` (every preset
+    accepts ``to`` — the plan-declared transport URL), connects the
+    transport once, and wires it either into the sink's forward path
+    (``forward=True``) or just hands it back for the preset to own
+    (``forward=False`` — serve_snapshot attaches it as the store mirror
+    instead). The transport rides the pieces dict under ``"transport"`` so
+    the session can poll its steering back-channel and close it.
+    """
+    known = set(known_options) | {"to"}
+    unknown = set(spec.options) - known
+    if unknown:
+        # a silently-ignored option would change semantics without a
+        # diagnostic (the removed sample_elems taught us that)
+        raise PlanError(
+            f"task {spec.name!r}: unknown {spec.preset} option(s) "
+            f"{sorted(unknown)} (known: {sorted(known)})")
+    url = spec.options.get("to")
+    tsink = (transport.connect(str(url), stream=spec.stream)
+             if url else None)
+    pieces: dict[str, Any] = {
+        "sink": _PresetSink(spec, transform,
+                            forward_to=tsink if forward else None),
+        "transport": tsink,
+    }
+    pieces.update(extra)
+    return pieces
+
+
 @register_preset("grad_health")
 def _grad_health_preset(spec: TaskSpec) -> dict:
-    """Gradient-health roll-up artifact (global norm, norm sheet, NaN flags)."""
+    """Gradient-health roll-up artifact (global norm, norm sheet, NaN flags).
+    Options: ``to`` (transport URL streaming each artifact to a consumer)."""
     from repro.core import analysis
 
-    def sink(step: int, payload: Any):
+    def transform(step: int, payload: Any):
         return analysis.gradient_health(payload, step)
 
-    return {"sink": sink}
+    return _terminal_pieces(spec, transform)
 
 
 @register_preset("spectra")
 def _spectra_preset(spec: TaskSpec) -> dict:
     """Per-tensor spectral/histogram/heatmap artifacts (the paper's
-    "image generation" analog). Options: ``work`` (cost knob, default 1)."""
+    "image generation" analog). Options: ``work`` (cost knob, default 1),
+    ``to`` (transport URL streaming each artifact to a consumer)."""
     from repro.core import analysis
     work = int(spec.options.get("work", 1))
 
-    def sink(step: int, payload: Any):
+    def transform(step: int, payload: Any):
         if isinstance(payload, Mapping):
             return analysis.summarize_tree(payload, step, work=work)
         return analysis.tensor_summary(spec.stream, payload, step, work=work)
 
-    return {"sink": sink}
+    return _terminal_pieces(spec, transform, known_options=("work",))
 
 
 @register_preset("serve_snapshot")
@@ -372,17 +446,12 @@ def _serve_snapshot_preset(spec: TaskSpec) -> dict:
     ``base_every`` (chain cadence, default 8), ``directory`` (persist
     frames crash-safely on disk; default in-memory), ``keep_chains``
     (retention — default 2, bounding a long-running serving loop's
-    frame accumulation; None keeps everything)."""
+    frame accumulation; None keeps everything), ``to`` (transport URL —
+    attached as the store's *mirror*, streaming every raw chain frame to
+    a remote replica that rebuilds a bit-identical chain via
+    ``SnapshotStore.ingest``)."""
     from repro.serving.snapshot import SnapshotStore
 
-    known = {"codec", "base_every", "directory", "keep_chains"}
-    unknown = set(spec.options) - known
-    if unknown:
-        # a silently-ignored option (e.g. the removed sample_elems of the
-        # pre-delta probe) would change semantics without a diagnostic
-        raise PlanError(
-            f"task {spec.name!r}: unknown serve_snapshot option(s) "
-            f"{sorted(unknown)} (known: {sorted(known)})")
     keep = spec.options.get("keep_chains", 2)
     store = SnapshotStore(
         spec.options.get("directory"),
@@ -391,7 +460,7 @@ def _serve_snapshot_preset(spec: TaskSpec) -> dict:
         keep_chains=None if keep is None else int(keep))
     stream = spec.stream
 
-    def sink(step: int, payload: Any):
+    def transform(step: int, payload: Any):
         version = None
         tree = payload
         hints = None
@@ -405,8 +474,17 @@ def _serve_snapshot_preset(spec: TaskSpec) -> dict:
         return store.publish(stream, step, tree, version=version,
                              chunk_hints=hints)
 
-    return {"sink": sink, "report": lambda: store.stats(stream),
-            "store": store}
+    # forward=False: the chain frames themselves are the wire product —
+    # the store mirrors every written frame's raw bytes, which is what
+    # makes the replica's restore bit-identical (a re-encoded
+    # SnapshotRecord forward would carry only the record, not the chain)
+    pieces = _terminal_pieces(
+        spec, transform, forward=False,
+        known_options=("codec", "base_every", "directory", "keep_chains"),
+        report=lambda: store.stats(stream), store=store)
+    if pieces["transport"] is not None:
+        store.set_mirror(pieces["transport"])
+    return pieces
 
 
 @register_preset("fault")
@@ -425,16 +503,12 @@ def _fault_preset(spec: TaskSpec) -> dict:
 
     Options: ``hosts`` (required — the participating host ids), ``grace_s``
     (heartbeat grace, default 30), ``alpha`` (EWMA smoothing, default 0.2),
-    ``factor`` (straggler threshold x median, default 1.5).
+    ``factor`` (straggler threshold x median, default 1.5), ``to``
+    (transport URL streaming each ingest report — a live health feed for a
+    remote dashboard).
     """
     from repro.distributed.fault import FaultController
 
-    known = {"hosts", "grace_s", "alpha", "factor"}
-    unknown = set(spec.options) - known
-    if unknown:
-        raise PlanError(
-            f"task {spec.name!r}: unknown fault option(s) "
-            f"{sorted(unknown)} (known: {sorted(known)})")
     hosts = spec.options.get("hosts")
     if not hosts:
         raise PlanError(
@@ -446,11 +520,14 @@ def _fault_preset(spec: TaskSpec) -> dict:
         alpha=float(spec.options.get("alpha", 0.2)),
         factor=float(spec.options.get("factor", 1.5)))
 
-    def sink(step: int, payload: Any):
+    def transform(step: int, payload: Any):
         return ctrl.ingest(step, payload)
 
-    return {"sink": sink, "report": ctrl.report, "controller": ctrl,
-            "attach": lambda session: ctrl.attach(session, spec.name)}
+    return _terminal_pieces(
+        spec, transform,
+        known_options=("hosts", "grace_s", "alpha", "factor"),
+        report=ctrl.report, controller=ctrl,
+        attach=lambda session: ctrl.attach(session, spec.name))
 
 
 # ---------------------------------------------------------------------------
@@ -708,6 +785,8 @@ class Session:
         self._reporters: dict[str, Callable[[], Mapping[str, Any]]] = {}
         self._stores: dict[str, Any] = {}
         self._controllers: dict[str, Any] = {}
+        self._transports: dict[str, transport.Sink] = {}
+        self._steering: list[dict] = []   # applied steering commands
         self._ckpt_meta: Optional[dict] = None
         self._remesh = None               # ElasticRestore after elastic load
         self._by_stream: dict[str, list[_Binding]] = {
@@ -734,6 +813,10 @@ class Session:
             self._stores[spec.name] = pieces["store"]
         if pieces.get("controller") is not None:
             self._controllers[spec.name] = pieces["controller"]
+        if pieces.get("transport") is not None:
+            # declared via options={"to": url}; the session polls its
+            # steering back-channel and closes it at finish
+            self._transports[spec.name] = pieces["transport"]
         session_gated = isinstance(spec.trigger, (When, Interval))
         every = (spec.trigger.n
                  if isinstance(spec.trigger, (Every, Adaptive)) else 1)
@@ -785,6 +868,10 @@ class Session:
             every=every, **opts)
         mgr = CheckpointManager(cfg, runtime=self.runtime)
         self.checkpoint = mgr
+        if mgr._mirror is not None:
+            # a mirror-replicating checkpoint task exposes the same
+            # steering back-channel as any other transport-bound task
+            self._transports[spec.name] = mgr._mirror
         self._by_stream[spec.stream].append(
             _Binding(spec, "ckpt_state", True, mgr=mgr))
 
@@ -799,6 +886,10 @@ class Session:
         actually fires (lazy providers, exactly like the legacy engine's
         providers dict).
         """
+        if self._transports:
+            # the consumer's steering back-channel: a select(0) per
+            # transport when idle, so polling every emit is cheap
+            self.poll_steering()
         bindings = self._by_stream.get(stream)
         provider = (_memoized(payload) if callable(payload)
                     else (lambda: payload))
@@ -827,6 +918,83 @@ class Session:
             providers[b.source] = provider
         if providers:
             self.runtime.submit(step, providers)
+
+    # -- steering (the consumer's back-channel) -------------------------------
+
+    def _binding(self, task: str) -> Optional[_Binding]:
+        for b_list in self._by_stream.values():
+            for b in b_list:
+                if b.spec.name == task:
+                    return b
+        return None
+
+    def poll_steering(self) -> list[dict]:
+        """Drain steering messages from every transport back-channel and
+        apply them to the live run — the ISAAC pattern: an in-situ
+        consumer retunes the producer mid-run.
+
+        A message is a JSON dict naming a task and the knobs to set::
+
+            {"task": "analytics", "every": 20}       # firing cadence
+            {"task": "ckpt", "lossy_eps": 0.05}      # lossy threshold
+
+        ``every`` retunes any bound task (checkpoint tasks via their
+        session-side trigger, everything else via the runtime's effective
+        period — overriding adapt-widened values too); ``lossy_eps``
+        retunes the checkpoint codec's error bound for every *subsequent*
+        save. Unknown knobs are recorded as ignored, never fatal — a
+        newer dashboard must not crash an older trainer. Applied commands
+        accumulate in ``report()["steering"]``.
+        """
+        applied = []
+        for via, tsink in self._transports.items():
+            for msg in tsink.poll_control():
+                if not isinstance(msg, dict):
+                    continue
+                rec = self._apply_steering(via, msg)
+                self._steering.append(rec)
+                applied.append(rec)
+        return applied
+
+    def _apply_steering(self, via: str, msg: dict) -> dict:
+        task = str(msg.get("task", via))
+        rec: dict[str, Any] = {"via": via, "task": task,
+                               "applied": {}, "ignored": {}}
+        binding = self._binding(task)
+        for key, val in msg.items():
+            if key == "task":
+                continue
+            if key == "every":
+                try:
+                    n = int(val)
+                    if n < 1:
+                        raise ValueError(f"every must be >= 1, got {n}")
+                    if binding is not None and binding.mgr is not None:
+                        # checkpoint saves are session-gated on the
+                        # trigger, not the runtime period
+                        binding.spec.trigger = Every(n)
+                    else:
+                        self.runtime.set_every(task, n)
+                    rec["applied"]["every"] = n
+                except (ValueError, TypeError) as e:
+                    rec["ignored"][key] = f"{val!r} ({e})"
+            elif key == "lossy_eps" and self.checkpoint is not None:
+                try:
+                    eps = float(val)
+                    if eps <= 0:
+                        raise ValueError("lossy_eps must be > 0")
+                    self.checkpoint.cfg.lossy_eps = eps
+                    rec["applied"]["lossy_eps"] = eps
+                except (ValueError, TypeError) as e:
+                    rec["ignored"][key] = f"{val!r} ({e})"
+            else:
+                rec["ignored"][key] = val
+        return rec
+
+    def transport_of(self, task: str) -> Optional[transport.Sink]:
+        """The transport sink a task declared via ``options={"to": ...}``
+        (None when the task has no transport)."""
+        return self._transports.get(task)
 
     def step_span(self, step: int):
         """Span context for the application's device step (``step/compute``)
@@ -1047,6 +1215,15 @@ class Session:
             self.runtime.wait_idle(timeout=timeout)
             if self._owns_runtime:
                 self.runtime.drain(timeout=timeout)
+            # transports not owned by a task sink (snapshot mirrors,
+            # checkpoint replication) close here; Sink.close is idempotent
+            for tsink in self._transports.values():
+                try:
+                    tsink.close()
+                except Exception:  # noqa: BLE001 - teardown must not raise
+                    pass
+            if self.checkpoint is not None:
+                self.checkpoint.finish()
         raise_ = (self._raise_on_error if raise_on_error is None
                   else raise_on_error)
         if raise_ and self.runtime.errors:
@@ -1087,6 +1264,15 @@ class Session:
         for name, entry in rep["tasks"].items():
             if name in rep.get("degraded", {}):
                 entry["degraded"] = dict(rep["degraded"][name])
+        for name, tsink in self._transports.items():
+            stats = {"sink": type(tsink).__name__,
+                     "frames": tsink.frames_written,
+                     "bytes": tsink.bytes_written}
+            if isinstance(tsink, transport.StreamSink):
+                stats["reconnects"] = tsink.reconnects
+            rep["tasks"].setdefault(name, {})["transport"] = stats
+        if self._steering:
+            rep["steering"] = [dict(s) for s in self._steering]
         if self._controllers:
             # failed hosts / straggler EWMA / applied mitigations, flat when
             # the plan declares one fault task (the common case)

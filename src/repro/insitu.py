@@ -31,6 +31,11 @@ from repro.core.session import (Adaptive, Every, InSituPlan, InSituTaskError,
                                 Interval, PlanError, Session, StreamSpec,
                                 TaskSpec, Trigger, When, preset_names,
                                 register_preset)
+from repro.core.transport import (CallableSink, FileSink, FileSource, Frame,
+                                  FrameCorruptError, MemorySink, Sink, Source,
+                                  StreamGapError, StreamSink, StreamSource,
+                                  TransportError, as_sink, connect,
+                                  decode_frame_payload)
 from repro.distributed.fault import (ElasticRestore, FaultController,
                                      plan_elastic_remesh)
 
@@ -39,4 +44,8 @@ __all__ = [
     "InSituPlan", "InSituTaskError", "Interval", "Placement", "PlanError",
     "Session", "Stage", "StreamSpec", "TaskSpec", "TransientError", "Trigger",
     "When", "plan_elastic_remesh", "preset_names", "register_preset",
+    "CallableSink", "FileSink", "FileSource", "Frame", "FrameCorruptError",
+    "MemorySink", "Sink", "Source", "StreamGapError", "StreamSink",
+    "StreamSource", "TransportError", "as_sink", "connect",
+    "decode_frame_payload",
 ]

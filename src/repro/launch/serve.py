@@ -29,6 +29,7 @@ def default_serve_plan(*, insitu_mode: str = "async",
                        snapshot_every: int = 4, base_every: int = 8,
                        codec: str = "zlib",
                        snapshot_dir: Optional[str] = None,
+                       snapshot_to: Optional[str] = None,
                        p_i: int = 2) -> dict:
     """The serving loop's declarative in-situ plan (plain-dict form).
 
@@ -39,11 +40,17 @@ def default_serve_plan(*, insitu_mode: str = "async",
     frame, the rest delta-encode against the previous snapshot (the slab
     is append-mostly), and firings where the engine version is unchanged
     collapse to a no-op frame. ``snapshot_dir`` persists the chain
-    crash-safely on disk (default: in-memory probe).
+    crash-safely on disk (default: in-memory probe). ``snapshot_to``
+    additionally streams every raw chain frame to a transport URL
+    (``tcp://host:port`` of a ``repro.launch.consume`` consumer) — the
+    remote replica tails the delta chain live and can restore
+    bit-identically while this loop keeps serving.
     """
     options: dict = {"base_every": base_every, "codec": codec}
     if snapshot_dir is not None:
         options["directory"] = snapshot_dir
+    if snapshot_to is not None:
+        options["to"] = snapshot_to
     return {
         "streams": ["kv_pages"],
         "workers": p_i,
@@ -152,10 +159,14 @@ def main() -> None:
                     help="full base frame every N snapshot publishes")
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist the snapshot chain to this directory")
+    ap.add_argument("--snapshot-to", default=None,
+                    help="stream the snapshot chain to a transport URL "
+                         "(tcp://host:port of a live consumer)")
     args = ap.parse_args()
     plan = default_serve_plan(insitu_mode=args.insitu,
                               base_every=args.snapshot_base_every,
-                              snapshot_dir=args.snapshot_dir)
+                              snapshot_dir=args.snapshot_dir,
+                              snapshot_to=args.snapshot_to)
     serve_loop(args.arch, n_requests=args.requests, max_new=args.max_new,
                insitu_mode=args.insitu, plan=plan,
                engine_kind=args.engine, num_pages=args.num_pages,

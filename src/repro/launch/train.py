@@ -343,6 +343,7 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
                analytics_every: int = 10, p_i: int = 2,
                plan: Optional[Any] = None,
                sink_faults: Optional[dict] = None,
+               on_session: Optional[Callable[[Any], None]] = None,
                log: Callable[[str], None] = print) -> dict:
     """End-to-end training with the in-situ stack declared as a plan.
 
@@ -354,6 +355,8 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
     (``insitu_mode``/``ckpt_every``/``analytics_every``) parameterize the
     default plan. ``sink_faults`` maps task names to fault hooks installed
     via ``PipelineRuntime.inject_sink_fault`` (transient-failure drills).
+    ``on_session`` runs once with the live session before the first step
+    (e.g. to grab a task's transport sink for a network-fault drill).
     """
     from repro.core import InSituPlan, Session, Telemetry
     from repro.data.pipeline import Prefetcher, batch_spec_for
@@ -382,6 +385,8 @@ def train_loop(arch: str, *, steps: int = 50, smoke: bool = True,
         with Session(plan, telemetry=tm, raise_on_error=True) as session:
             for task_name, hook in (sink_faults or {}).items():
                 session.runtime.inject_sink_fault(task_name, hook)
+            if on_session is not None:
+                on_session(session)
             # record the mesh geometry with every save so a later
             # restore(elastic=True) can plan the remesh from the manifest
             session.set_checkpoint_meta(mesh=mesh)

@@ -55,7 +55,7 @@ from typing import Any, Mapping, Optional
 
 import numpy as np
 
-from repro.core import codecs, delta
+from repro.core import codecs, delta, transport
 
 PyTree = Any
 
@@ -146,7 +146,8 @@ class SnapshotStore:
                  base_every: int = 8, codec: str = "zlib",
                  chunk_bytes: int = codecs.DEFAULT_CHUNK,
                  parallel: bool = True,
-                 keep_chains: Optional[int] = None) -> None:
+                 keep_chains: Optional[int] = None,
+                 mirror: Optional[Any] = None) -> None:
         if base_every < 1:
             raise ValueError(f"base_every must be >= 1, got {base_every}")
         if keep_chains is not None and keep_chains < 1:
@@ -166,8 +167,32 @@ class SnapshotStore:
         self.keep_chains = keep_chains
         self._streams: dict[str, _StreamState] = {}
         self._lock = threading.Lock()
+        self._mirror: Optional[transport.Sink] = None
+        self.mirror_frames = 0
+        self.mirror_failures = 0
+        if mirror is not None:
+            self.set_mirror(mirror)
         if directory is not None:
             os.makedirs(directory, exist_ok=True)
+
+    def set_mirror(self, sink: Any) -> None:
+        """Attach a transport-backed publish target: every written frame's
+        raw bytes are forwarded as a ``CODEC_RAW`` transport frame, so a
+        remote replica can tail the delta chain live (``ingest`` on the
+        consumer side rebuilds a bit-identical chain). Accepts a
+        :class:`~repro.core.transport.Sink` or a transport URL. Mirroring
+        is best-effort: a dead consumer counts ``mirror_failures`` instead
+        of failing the local publish."""
+        self._mirror = (transport.connect(sink) if isinstance(sink, str)
+                        else sink)
+
+    def close_mirror(self) -> None:
+        if self._mirror is not None:
+            try:
+                self._mirror.close()
+            except Exception:  # noqa: BLE001 - teardown must not raise
+                pass
+            self._mirror = None
 
     # -- frame packing --------------------------------------------------------
 
@@ -239,21 +264,28 @@ class SnapshotStore:
                      frame: bytes) -> None:
         if self.directory is None:
             st.mem_frames.append((st.seq, frame))
+        else:
+            d = self._stream_dir(stream)
+            os.makedirs(d, exist_ok=True)
+            transport.atomic_write_bytes(
+                self._frame_path(stream, st.seq), frame)
+        self._forward_frame(stream, frame)
+
+    def _forward_frame(self, stream: str, frame: bytes) -> None:
+        """Best-effort mirror of one raw snapshot frame. The transport
+        frame's step comes from the snapshot header; the raw bytes ship
+        verbatim (``CODEC_RAW``) so the replica's chain — crcs and all —
+        is bit-identical to the local one. A noop-collapse rewrite reuses
+        its seq, which :meth:`ingest` resolves by replacement."""
+        if self._mirror is None:
             return
-        d = self._stream_dir(stream)
-        os.makedirs(d, exist_ok=True)
-        final = self._frame_path(stream, st.seq)
-        tmp = os.path.join(d, f".tmp_frame_{st.seq:08d}")
-        with open(tmp, "wb") as f:
-            f.write(frame)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, final)
-        dfd = os.open(d, os.O_RDONLY)
+        step = struct.unpack_from(_HEADER, frame, 4)[4]
         try:
-            os.fsync(dfd)
-        finally:
-            os.close(dfd)
+            self._mirror.write(int(step), frame, stream=stream,
+                               codec=transport.CODEC_RAW)
+            self.mirror_frames += 1
+        except Exception:  # noqa: BLE001 - replication never blocks publish
+            self.mirror_failures += 1
 
     def _list_frames(self, stream: str) -> list[tuple[int, str]]:
         """Published (seq, path) pairs on disk, sorted by seq."""
@@ -398,6 +430,7 @@ class SnapshotStore:
                 if collapse:
                     if self.directory is None:
                         st.mem_frames[-1] = (seq, frame)
+                        self._forward_frame(stream, frame)
                     else:
                         prev = st.seq           # _write_frame targets st.seq
                         st.seq = seq
@@ -458,6 +491,40 @@ class SnapshotStore:
             return rec
 
     # -- consumer side --------------------------------------------------------
+
+    def ingest(self, stream: str, raw: bytes) -> dict:
+        """Place one mirrored frame (raw bytes off a transport) into this
+        store's chain — the replica half of :meth:`set_mirror`.
+
+        The frame's own header says where it goes: frames land by their
+        embedded seq, and a frame re-arriving with an existing seq
+        *replaces* it (that is how producer-side noop collapse — which
+        rewrites the tip frame in place — reaches the replica). Validates
+        magic/crc up front, so a corrupted frame raises the usual typed
+        :class:`SnapshotCorruptError` instead of poisoning the chain.
+        """
+        raw = bytes(raw)
+        kind, seq, chain_pos, step, _ = self._unpack_frame(stream, None, raw)
+        with self._lock:
+            st = self._state(stream)
+            if self.directory is None:
+                st.mem_frames = [(s, b) for s, b in st.mem_frames if s != seq]
+                st.mem_frames.append((seq, raw))
+                st.mem_frames.sort(key=lambda e: e[0])
+            else:
+                d = self._stream_dir(stream)
+                os.makedirs(d, exist_ok=True)
+                transport.atomic_write_bytes(self._frame_path(stream, seq),
+                                             raw)
+            st.seq = max(st.seq, seq + 1)
+            # the replica must not treat replayed frames as local publishes
+            # (its own stats stay producer-truthful), but the monotonic
+            # guard still advances so a later local publish can't regress
+            if st.last_step is None or step >= st.last_step:
+                st.last_step = step
+        return {"stream": stream, "seq": seq, "step": step,
+                "kind": _KIND_NAMES.get(kind, str(kind)),
+                "chain_pos": chain_pos}
 
     def _replay(self, stream: str, upto: Optional[int] = None
                 ) -> tuple[int, dict[str, np.ndarray], int]:
@@ -594,4 +661,6 @@ class SnapshotStore:
                 "base_every": self.base_every,
                 "keep_chains": self.keep_chains,
                 "codec": self.codec,
+                "mirror_frames": self.mirror_frames,
+                "mirror_failures": self.mirror_failures,
             }

@@ -1,0 +1,24 @@
+"""Tail a live in-situ run over TCP and optionally steer it back.
+
+    PYTHONPATH=src python tools/insitu_consumer.py --port 9100 \\
+        --steer '{"task": "kv_snapshot", "every": 2}' --restore kv_pages
+
+Point any producer transport at the printed address: a plan option
+``"to": "tcp://127.0.0.1:9100"``, a ``CheckpointConfig.mirror``, or
+``repro.launch.serve --snapshot-to tcp://127.0.0.1:9100``. Snapshot chain
+frames build a local replica (``--restore`` proves bit-identical state),
+checkpoint shards land under ``--out-dir``, and analysis artifacts are
+decoded with the shared registry. This is a thin CLI over
+``repro.launch.consume.consume_loop``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.consume import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()
