@@ -31,13 +31,17 @@ def run(quick: bool = True) -> dict:
         common.row(f"fig06/nodes2/{mode}", r["wall_s"] * 1e6 / n,
                    f"measured;stall={r['sync_stall_s']:.3f};"
                    f"handoff={r['handoff_s']:.3f}")
-    # F2 core claims, real: sync stalls by ~the task time; async does not
-    assert measured["sync"]["wall_s"] > none_wall * 1.3
+    # F2 core claims, real: sync stalls by ~the task time; async does not.
+    # The stall scales with *firings*, not steps — a fixed 1.3x multiplier
+    # only holds when every step fires (quick mode: fires/n = 1/2); in full
+    # mode (fires/n = 1/5) the added stall is ~t1/5 per step, so the bound
+    # must be relative to fires * t1.
+    fires = n // every
+    assert measured["sync"]["wall_s"] > none_wall + 0.5 * fires * t1
     assert measured["async"]["wall_s"] < measured["sync"]["wall_s"]
     assert measured["async"]["sync_stall_s"] == 0.0
 
     img = common.amdahl_from_calibration(t1, sigma=0.15)
-    fires = n // every
     out = {"nodes": [], "sync": [], "async": []}
     for nodes in (2, 3, 4, 6, 8):
         app = none_wall                           # same GPUs per node ratio

@@ -1,0 +1,200 @@
+"""Prefix sharing + replica hydration: prefill saved, TTFT saved.
+
+Two measurements, both against the same paged engine geometry (equal KV
+page budget, identical request streams):
+
+**Prefill reduction.** N requests share a 3-page system prompt and differ
+only in a short unique tail. The unshared engine prefills every prompt in
+full (``N * (prefix + tail)`` tokens); the sharing engine prefills the
+prefix once at registration, COW-maps it into every matching admit, and
+prefills only each request's tail — ``prefix + N * tail`` tokens. The
+outputs must be token-for-token identical (sharing is a page-table
+concern; the math never changes), so the ratio is pure avoided work:
+
+    quick (N=8):  8 * 52 = 416  vs  48 + 8 * 4 =  80  ->  5.2x
+    full (N=16): 16 * 52 = 832  vs  48 + 16 * 4 = 112  ->  7.4x
+
+Acceptance: >= 5x fewer prefilled tokens, bitwise-identical outputs.
+
+**Cold-replica TTFT.** A replica can reach the producer's serving state
+two ways: re-prefill every in-flight request from its prompt, or rebuild
+from the snapshot chain (``PagedServingEngine.from_snapshot``) and decode
+immediately. Both paths are timed jit-warm (best of 3) to first decoded
+token. Acceptance: hydration beats re-prefill (>= 2x on the tracked full
+workload; quick/CI gates >= 1x — it must never lose).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+PREFIX_TOKENS = 48                  # 3 pages of shared system prompt
+TAIL_TOKENS = 4                     # unique per-request suffix
+
+
+def _requests(n: int, vocab: int, prefix: np.ndarray, *, max_new: int,
+              seed: int):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(i, np.concatenate(
+        [prefix, rng.integers(0, vocab, size=TAIL_TOKENS)]), max_new=max_new)
+        for i in range(n)]
+
+
+def _mk_engine(cfg, prm, *, num_pages: int, max_reqs: int):
+    from repro.serving.pages import PagedServingEngine
+
+    return PagedServingEngine(cfg, prm, num_pages=num_pages, page_size=16,
+                              max_reqs=max_reqs,
+                              prompt_len=PREFIX_TOKENS + TAIL_TOKENS + 4,
+                              max_len=64)
+
+
+def _ttft(once, repeats: int = 3) -> float:
+    """Best-of-N wall time to first decoded token (call ``once`` warm)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        once()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True) -> dict:
+    import jax
+
+    from repro.configs import base
+    from repro.models import params as P
+    from repro.models import transformer
+    from repro.serving.engine import Request
+    from repro.serving.pages import PagedServingEngine
+
+    arch = "smollm-135m"
+    cfg = base.get(arch, smoke=True)
+    prm = P.materialize(jax.random.PRNGKey(0), transformer.param_spec(cfg))
+
+    n = 8 if quick else 16
+    max_new, max_reqs = 8, 4
+    # equal budget both ways: 4 concurrent chains of 4 pages + the 3-page
+    # prefix + scratch
+    num_pages = max_reqs * 4 + 3 + 1
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, size=PREFIX_TOKENS)
+    mk_reqs = lambda: _requests(n, cfg.vocab_size, prefix,
+                                max_new=max_new, seed=5)
+
+    # -- prefill reduction, token-identical ---------------------------------
+    a, b = mk_reqs(), mk_reqs()
+    plain = _mk_engine(cfg, prm, num_pages=num_pages, max_reqs=max_reqs)
+    plain.run(a, max_steps=512)
+    shared = _mk_engine(cfg, prm, num_pages=num_pages, max_reqs=max_reqs)
+    shared.register_prefix(prefix)
+    shared.run(b, max_steps=512)
+
+    for ra, rb in zip(a, b):
+        assert ra.done and rb.done
+        assert ra.out == rb.out, (
+            f"sharing changed request {ra.rid}: {ra.out} vs {rb.out}")
+    sp, ss = plain.prefix_stats(), shared.prefix_stats()
+    reduction = sp["prefill_tokens"] / ss["prefill_tokens"]
+    common.row("prefix_sharing/unshared_prefill_tokens",
+               float(sp["prefill_tokens"]), "measured")
+    common.row("prefix_sharing/shared_prefill_tokens",
+               float(ss["prefill_tokens"]),
+               f"hit_rate={ss['hit_rate']:.0%};"
+               f"shared_tokens={ss['shared_tokens']}")
+    common.row("prefix_sharing/prefill_reduction", 0.0, f"{reduction:.1f}x")
+    assert ss["hit_rate"] == 1.0, ss
+    assert reduction >= 5.0, (
+        f"prefix sharing only cut prefill {reduction:.1f}x "
+        f"({sp['prefill_tokens']} -> {ss['prefill_tokens']}, want >= 5x)")
+
+    # -- cold-replica TTFT: hydrate vs re-prefill ---------------------------
+    producer = _mk_engine(cfg, prm, num_pages=num_pages, max_reqs=max_reqs)
+    producer.register_prefix(prefix)
+    live = mk_reqs()[:max_reqs]
+    for r in live:
+        assert producer.admit(r)
+    producer.step()                              # mid-serve snapshot point
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        producer.snapshot_payload()["cache"])
+    leaves = {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat}
+
+    # jit caches are per engine instance, so both paths run on one warm
+    # engine each — the timed region is restore-vs-prefill work, not
+    # retracing. (from_snapshot itself is the warm-up for the hydrator.)
+    hyd = PagedServingEngine.from_snapshot(cfg, prm, leaves)
+    hyd.step()
+
+    def hydrate_once():
+        hyd.load_snapshot(leaves)                # replica back to chain pt
+        hyd.step()
+
+    rep = _mk_engine(cfg, prm, num_pages=num_pages, max_reqs=max_reqs)
+
+    def reprefill_once():
+        # what a replica without the chain must do: re-admit (re-prefill)
+        # every in-flight request from its prompt, then decode
+        for row, a in enumerate(rep.active):
+            if a is not None:
+                rep.free_resource(row)
+        for r in live:
+            ok = rep.admit(Request(r.rid, r.prompt.copy(),
+                                   max_new=r.max_new))
+            assert ok
+        rep.step()
+
+    reprefill_once()                             # warm prefill/insert jits
+    t_hydrate = _ttft(hydrate_once)
+    t_reprefill = _ttft(reprefill_once)
+    ttft_x = t_reprefill / t_hydrate
+    common.row("prefix_sharing/ttft_hydrate", t_hydrate * 1e6, "measured")
+    common.row("prefix_sharing/ttft_reprefill", t_reprefill * 1e6,
+               "measured")
+    common.row("prefix_sharing/ttft_speedup", 0.0, f"{ttft_x:.1f}x")
+    floor = 1.0 if quick else 2.0
+    assert ttft_x >= floor, (
+        f"hydrated cold-replica TTFT only {ttft_x:.2f}x re-prefill "
+        f"({t_hydrate * 1e3:.1f} ms vs {t_reprefill * 1e3:.1f} ms, "
+        f"want >= {floor}x)")
+
+    return {
+        "arch": arch,
+        "n_requests": n,
+        "prefix_tokens": PREFIX_TOKENS,
+        "tail_tokens": TAIL_TOKENS,
+        "num_pages": num_pages,
+        "unshared_prefill_tokens": sp["prefill_tokens"],
+        "shared_prefill_tokens": ss["prefill_tokens"],
+        "shared_tokens": ss["shared_tokens"],
+        "prefill_reduction_x": reduction,
+        "hit_rate": ss["hit_rate"],
+        "ttft_hydrate_s": t_hydrate,
+        "ttft_reprefill_s": t_reprefill,
+        "ttft_speedup_x": ttft_x,
+        "quick": quick,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write the metrics dict as JSON to this path")
+    args = ap.parse_args()
+    m = run(quick=not args.full)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(m, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {os.path.abspath(args.out)}")

@@ -28,8 +28,9 @@ def main() -> None:
                             fig07_sync_compression, fig08_hybrid_compression,
                             fig09_compression_scaling,
                             fig10_12_qe_checkpoint, handoff_overlap,
-                            lossy_ratio, roofline, serving_throughput,
-                            snapshot_delta, stream_sink, tab2_codecs)
+                            lossy_ratio, prefix_sharing, roofline,
+                            serving_throughput, snapshot_delta, stream_sink,
+                            tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -48,6 +49,7 @@ def main() -> None:
         ("checkpoint_io", checkpoint_io.run),
         ("snapshot_delta", snapshot_delta.run),
         ("serving", serving_throughput.run),
+        ("prefix_sharing", prefix_sharing.run),
         ("fault", fault_recovery.run),
         ("stream_sink", stream_sink.run),
     ]
@@ -66,7 +68,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
     tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving",
-               "fault", "stream_sink")
+               "prefix_sharing", "fault", "stream_sink")
     if not quick and all(name in results for name in tracked):
         # only an unfiltered --full run refreshes the tracked perf artifact
         # (quick-mode numbers are not comparable across PRs, and a --only
@@ -75,6 +77,7 @@ def main() -> None:
         artifact["checkpoint_io"] = results["checkpoint_io"]
         artifact["snapshot_delta"] = results["snapshot_delta"]
         artifact["serving"] = results["serving"]
+        artifact["prefix_sharing"] = results["prefix_sharing"]
         artifact["fault"] = results["fault"]
         artifact["stream_sink"] = results["stream_sink"]
         handoff_overlap.write_artifact(artifact)

@@ -787,6 +787,7 @@ class Session:
         self._controllers: dict[str, Any] = {}
         self._transports: dict[str, transport.Sink] = {}
         self._steering: list[dict] = []   # applied steering commands
+        self._steering_rejected = 0       # invalid commands refused
         self._ckpt_meta: Optional[dict] = None
         self._remesh = None               # ElasticRestore after elastic load
         self._by_stream: dict[str, list[_Binding]] = {
@@ -957,18 +958,40 @@ class Session:
         return applied
 
     def _apply_steering(self, via: str, msg: dict) -> dict:
+        """Validate-then-apply one steering message.
+
+        Three buckets per command: ``applied`` (took effect), ``rejected``
+        (named a known knob with an invalid value — ``every <= 0``,
+        non-finite/negative ``lossy_eps``, an unknown task name — these
+        must never touch cadence state), and ``ignored`` (unknown knob, or
+        a knob with nothing bound to retune — a newer dashboard must not
+        crash an older trainer). Rejections are counted into
+        ``report()["steering"]["steering_rejected"]``.
+        """
+        import math
+
         task = str(msg.get("task", via))
         rec: dict[str, Any] = {"via": via, "task": task,
-                               "applied": {}, "ignored": {}}
+                               "applied": {}, "rejected": {}, "ignored": {}}
         binding = self._binding(task)
+
+        def reject(key, val, why):
+            rec["rejected"][key] = f"{val!r} ({why})"
+            self._steering_rejected += 1
+
         for key, val in msg.items():
             if key == "task":
                 continue
             if key == "every":
                 try:
                     n = int(val)
-                    if n < 1:
-                        raise ValueError(f"every must be >= 1, got {n}")
+                except (ValueError, TypeError) as e:
+                    reject(key, val, e)
+                    continue
+                if n < 1:
+                    reject(key, val, f"every must be >= 1, got {n}")
+                    continue
+                try:
                     if binding is not None and binding.mgr is not None:
                         # checkpoint saves are session-gated on the
                         # trigger, not the runtime period
@@ -976,17 +999,26 @@ class Session:
                     else:
                         self.runtime.set_every(task, n)
                     rec["applied"]["every"] = n
-                except (ValueError, TypeError) as e:
-                    rec["ignored"][key] = f"{val!r} ({e})"
-            elif key == "lossy_eps" and self.checkpoint is not None:
+                except (ValueError, KeyError) as e:
+                    # unknown task name: the runtime refused to retune
+                    reject(key, val, e)
+            elif key == "lossy_eps":
                 try:
                     eps = float(val)
-                    if eps <= 0:
-                        raise ValueError("lossy_eps must be > 0")
-                    self.checkpoint.cfg.lossy_eps = eps
-                    rec["applied"]["lossy_eps"] = eps
                 except (ValueError, TypeError) as e:
-                    rec["ignored"][key] = f"{val!r} ({e})"
+                    reject(key, val, e)
+                    continue
+                # NaN fails the isfinite check, not the comparison —
+                # ``nan <= 0`` is False, so a plain ``<= 0`` guard would
+                # wave NaN straight into the codec's error bound
+                if not math.isfinite(eps) or eps <= 0:
+                    reject(key, val, "lossy_eps must be finite and > 0")
+                    continue
+                if self.checkpoint is None:
+                    rec["ignored"][key] = eps     # valid, nothing to retune
+                    continue
+                self.checkpoint.cfg.lossy_eps = eps
+                rec["applied"]["lossy_eps"] = eps
             else:
                 rec["ignored"][key] = val
         return rec
@@ -1271,8 +1303,11 @@ class Session:
             if isinstance(tsink, transport.StreamSink):
                 stats["reconnects"] = tsink.reconnects
             rep["tasks"].setdefault(name, {})["transport"] = stats
-        if self._steering:
-            rep["steering"] = [dict(s) for s in self._steering]
+        if self._steering or self._steering_rejected:
+            rep["steering"] = {
+                "commands": [dict(s) for s in self._steering],
+                "steering_rejected": self._steering_rejected,
+            }
         if self._controllers:
             # failed hosts / straggler EWMA / applied mitigations, flat when
             # the plan declares one fault task (the common case)

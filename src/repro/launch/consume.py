@@ -36,12 +36,14 @@ def consume_loop(source: Optional[transport.StreamSource] = None, *,
                  host: str = "127.0.0.1", port: int = 0,
                  out_dir: Optional[str] = None,
                  snapshot_dir: Optional[str] = None,
+                 store: Optional[SnapshotStore] = None,
                  steer: Optional[Sequence[dict]] = None,
                  steer_after: int = 1,
                  idle_timeout_s: float = 5.0,
                  start_grace_s: Optional[float] = None,
                  max_frames: Optional[int] = None,
                  on_frame: Optional[Callable[[transport.Frame], None]] = None,
+                 stop: Optional[Callable[[dict], bool]] = None,
                  log=print) -> dict:
     """Listen for frames and route them until the stream drains.
 
@@ -51,6 +53,12 @@ def consume_loop(source: Optional[transport.StreamSource] = None, *,
     are sent up the back-channel once ``steer_after`` data frames have
     arrived — by then at least one producer connection is live.
 
+    ``store`` overrides the loop's own replica :class:`SnapshotStore`
+    (``snapshot_dir`` is then ignored) — the replica-hydration path shares
+    one store between this loop and the engine being hydrated. ``stop``
+    is checked after each routed frame with the running report; returning
+    True ends the loop early (e.g. "the chain is restorable now").
+
     Returns a report dict: frame/byte counts per stream and codec, the
     replica ``store`` (for ``restore()`` assertions), materialized file
     paths, decoded latest artifacts, and how many producers each steering
@@ -59,8 +67,9 @@ def consume_loop(source: Optional[transport.StreamSource] = None, *,
     own_source = source is None
     if own_source:
         source = transport.StreamSource(host=host, port=port)
-    store = SnapshotStore(snapshot_dir) if snapshot_dir is not None \
-        else SnapshotStore()
+    if store is None:
+        store = SnapshotStore(snapshot_dir) if snapshot_dir is not None \
+            else SnapshotStore()
     steer = list(steer or [])
     report: dict[str, Any] = {
         "address": source.address,
@@ -96,6 +105,9 @@ def consume_loop(source: Optional[transport.StreamSource] = None, *,
                     log(f"consumer: steered {msg} -> "
                         f"{reached} producer(s)")
                 steer = []
+            if stop is not None and stop(report):
+                log("consumer: stop condition met, detaching")
+                break
     finally:
         if own_source:
             source.close()

@@ -68,21 +68,53 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                slots: int = 4, insitu_mode: str = "async",
                seed: int = 0, plan: Optional[Any] = None,
                engine_kind: str = "paged", num_pages: int = 17,
-               page_size: int = 16, log=print) -> dict:
+               page_size: int = 16, prefix_len: int = 0,
+               hydrate_from: Optional[Any] = None, log=print) -> dict:
+    """Serve ``n_requests`` with the in-situ plan attached.
+
+    ``prefix_len > 0`` gives every request a common ``prefix_len``-token
+    system prompt, registered on the paged engine so matching admits map
+    the shared chain copy-on-write and prefill only their own suffix.
+    ``hydrate_from`` (a chain directory, ``tcp://host:port`` listen
+    address, or ``SnapshotStore``) skips cold start entirely: the paged
+    engine is rebuilt from the snapshot chain — pool, tables, allocator,
+    prefixes, in-flight requests — and keeps serving from there.
+    """
     cfg = configs.get(arch, smoke=True)
     params = P_lib.materialize(jax.random.PRNGKey(seed),
                                transformer.param_spec(cfg))
+    hydrate_info = None
+    prompt_len = max(16, prefix_len + 8)
+    max_len = max(64, ((prompt_len + max_new + page_size - 1)
+                       // page_size) * page_size)
     if engine_kind == "paged":
-        # default: continuous batching over the shared page pool — same KV
-        # budget as `slots` dense stripes ((num_pages-1) * page_size tokens)
-        # but admission is per-page, so short requests stop blocking.
-        engine = PagedServingEngine(cfg, params, num_pages=num_pages,
-                                    page_size=page_size, max_reqs=2 * slots,
-                                    prompt_len=16, max_len=64)
+        if hydrate_from is not None:
+            from repro.launch.hydrate import ReplicaHydrator
+
+            # a cold replica usually starts BEFORE the producer has
+            # published anything — give the producer's jit warm-up a
+            # grace window before the first frame, then a generous idle
+            # timeout between frames
+            engine, hydrate_info = ReplicaHydrator(hydrate_from).hydrate(
+                cfg, params, idle_timeout_s=30.0, start_grace_s=120.0,
+                log=log)
+        else:
+            # default: continuous batching over the shared page pool —
+            # same KV budget as `slots` dense stripes
+            # ((num_pages-1) * page_size tokens) but admission is
+            # per-page, so short requests stop blocking.
+            engine = PagedServingEngine(cfg, params, num_pages=num_pages,
+                                        page_size=page_size,
+                                        max_reqs=2 * slots,
+                                        prompt_len=prompt_len,
+                                        max_len=max_len)
     elif engine_kind == "dense":
+        if hydrate_from is not None:
+            raise ValueError("hydration needs the paged engine "
+                             "(engine_kind='paged')")
         # parity / benchmark baseline: fixed dense slots
-        engine = ServingEngine(cfg, params, slots=slots, prompt_len=16,
-                               max_len=64)
+        engine = ServingEngine(cfg, params, slots=slots,
+                               prompt_len=prompt_len, max_len=max_len)
     else:
         raise ValueError(f"unknown engine kind {engine_kind!r}")
     tm = Telemetry()
@@ -94,11 +126,27 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
         plan = InSituPlan.from_dict(plan)
 
     rng = np.random.default_rng(seed)
-    requests = [
-        Request(i, rng.integers(0, cfg.vocab_size, size=16), max_new=max_new)
-        for i in range(n_requests)]
+    if prefix_len > 0:
+        # shared system prompt + a short per-request unique tail
+        prefix = rng.integers(0, cfg.vocab_size, size=prefix_len)
+        requests = [
+            Request(i, np.concatenate(
+                [prefix, rng.integers(0, cfg.vocab_size, size=4)]),
+                max_new=max_new)
+            for i in range(n_requests)]
+        if engine_kind == "paged" and prefix_len >= engine.page_size:
+            engine.register_prefix(prefix)
+    else:
+        requests = [
+            Request(i, rng.integers(0, cfg.vocab_size, size=16),
+                    max_new=max_new)
+            for i in range(n_requests)]
 
+    # a hydrated engine carries the producer's in-flight requests — they
+    # drain through the same loop and count toward the serve totals
     pending = list(requests)
+    if hydrate_info is not None:
+        requests = [a for a in engine.active if a is not None] + requests
     step = 0
     t0 = time.perf_counter()
     with Session(plan, telemetry=tm, raise_on_error=True) as session:
@@ -118,10 +166,20 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
     done = sum(1 for r in requests if r.done)
     toks = sum(len(r.out) for r in requests)
     rep = session.report()
+    prefix_stats = None
     if engine_kind == "paged":
         ps = engine.page_stats()
         log(f"page pool: {ps['used_pages']}/{ps['num_pages'] - 1} pages "
             f"in use at exit, {ps['active_requests']} active rows")
+        prefix_stats = engine.prefix_stats()
+        log(f"prefix sharing: {prefix_stats['prefixes']} prefix(es) "
+            f"({prefix_stats['prefix_pages']} pages), "
+            f"hit rate {prefix_stats['hit_rate']:.0%} "
+            f"({prefix_stats['hits']} hit / {prefix_stats['misses']} miss), "
+            f"{prefix_stats['shared_pages']} shared pages now, "
+            f"{prefix_stats['pages_saved']} pages saved by sharing, "
+            f"{prefix_stats['shared_tokens']} prompt tokens served from "
+            f"shared pages vs {prefix_stats['prefill_tokens']} prefilled")
     snap = rep["tasks"].get("kv_snapshot", {})
     if snap.get("publishes"):
         log(f"snapshots: {snap['publishes']} published "
@@ -136,7 +194,8 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
         f"(materialize {rep['handoff_materialize_s'] * 1e3:.2f}ms overlapped)")
     return {"requests": requests, "telemetry": tm, "steps": step,
             "insitu_results": len(session.results),
-            "session_report": rep, "tok_per_s": toks / total}
+            "session_report": rep, "tok_per_s": toks / total,
+            "prefix_stats": prefix_stats, "hydrate_info": hydrate_info}
 
 
 def main() -> None:
@@ -162,6 +221,15 @@ def main() -> None:
     ap.add_argument("--snapshot-to", default=None,
                     help="stream the snapshot chain to a transport URL "
                          "(tcp://host:port of a live consumer)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="give every request a common system prompt of "
+                         "this many tokens, registered for COW sharing "
+                         "on the paged engine")
+    ap.add_argument("--hydrate-from", default=None,
+                    help="bring the paged engine up from a snapshot "
+                         "chain instead of cold: a chain directory, or a "
+                         "tcp://host:port address to listen on for a "
+                         "producer's mirrored frames")
     args = ap.parse_args()
     plan = default_serve_plan(insitu_mode=args.insitu,
                               base_every=args.snapshot_base_every,
@@ -170,7 +238,8 @@ def main() -> None:
     serve_loop(args.arch, n_requests=args.requests, max_new=args.max_new,
                insitu_mode=args.insitu, plan=plan,
                engine_kind=args.engine, num_pages=args.num_pages,
-               page_size=args.page_size)
+               page_size=args.page_size, prefix_len=args.prefix_len,
+               hydrate_from=args.hydrate_from)
 
 
 if __name__ == "__main__":

@@ -287,14 +287,18 @@ def _mla_prefill_attn(p, xn, cfg, positions, *, max_len):
 
 def make_prefill(cfg: ModelConfig, max_len: int,
                  last_only: bool = False) -> Callable:
-    """prefill(params, tokens (B,S)) -> (logits, cache, lengths).
+    """prefill(params, tokens (B,S)[, last_pos]) -> (logits, cache, lengths).
 
     ``last_only`` returns logits for the final position only — the serving
     path (avoids materializing (B,S,V), which at 32k x 152k vocab would be
-    hundreds of GB).
+    hundreds of GB). ``last_pos`` (traced) selects position ``last_pos-1``
+    instead of ``-1`` — for callers that right-pad every prompt to one
+    canonical width so all prefills share a single compiled shape (XLA
+    kernel rounding is shape-dependent, so one shape is what makes a
+    shared-prefix admit bitwise equal to an unshared one).
     """
 
-    def prefill(params, tokens):
+    def prefill(params, tokens, last_pos=None):
         h = embed(params["embed"], tokens)
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -340,7 +344,10 @@ def make_prefill(cfg: ModelConfig, max_len: int,
 
         h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
         if last_only:
-            h = h[:, -1:]
+            if last_pos is not None:
+                h = jax.lax.dynamic_slice_in_dim(h, last_pos - 1, 1, axis=1)
+            else:
+                h = h[:, -1:]
         logits = unembed(params["embed"], h, cfg.vocab_size)
         return logits, cache, lengths
 

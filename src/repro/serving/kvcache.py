@@ -194,6 +194,20 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return _map_layout(pool_l, mk), _map_layout(state_l, mk)
 
 
+def chain_view(pool_kv: PyTree, page_ids) -> PyTree:
+    """Gather one page chain back into token order, jit-traceable.
+
+    pool leaf ``(layers, num_pages, page_size, ...)`` -> view
+    ``(layers, 1, n*page_size, ...)`` — the single-request prefill cache
+    layout, so a continuation prefill can attend over a resident shared
+    prefix without the host ever materializing it.
+    """
+    def leaf(a):
+        gathered = a[:, page_ids]                      # (L, n, ps, ...)
+        return gathered.reshape(a.shape[0], -1, *a.shape[3:])[:, None]
+    return jax.tree.map(leaf, pool_kv)
+
+
 def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
     return _map_layout(cache_layout(cfg, batch, max_len),
                        lambda d: jax.ShapeDtypeStruct(d[0], jnp.dtype(d[2])))

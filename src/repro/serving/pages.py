@@ -42,8 +42,9 @@ zero-payload COPY ops in the PR-5 store.
 """
 from __future__ import annotations
 
+import json
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,7 @@ from repro.models.layers import embed, mlp, rmsnorm, unembed
 from repro.models.transformer import project_qkv
 from repro.serving import engine as E
 from repro.serving import kvcache
+from repro.serving import prefix as prefix_lib
 from repro.serving.engine import Request, make_prefill
 
 PyTree = Any
@@ -232,11 +234,18 @@ def make_paged_decode(cfg: ModelConfig, page_size: int) -> Callable:
 # ---------------------------------------------------------------------------
 
 class PageAllocator:
-    """Host-side free list over page ids 1..num_pages-1 (0 is scratch).
+    """Host-side refcounted free list over page ids 1..num_pages-1 (0 is
+    scratch).
 
     Whole chains are reserved at admission, so allocation can never fail
-    mid-decode; double-free and foreign-page frees raise instead of
-    corrupting the list (property-tested in tests/test_paged_serving.py).
+    mid-decode. Pages are reference-counted so one chain can back many
+    requests (shared-prefix COW mapping): ``alloc`` hands out pages at
+    refcount 1, ``share`` takes another reference on an already-live chain,
+    and ``free`` drops one reference — a page returns to the free list only
+    when its count reaches zero, so a referenced page can never be
+    reclaimed out from under a reader. Over-free and foreign-page frees
+    raise instead of corrupting the list (property-tested in
+    tests/test_paged_serving.py and tests/test_prefix_sharing.py).
     """
 
     def __init__(self, num_pages: int) -> None:
@@ -244,26 +253,66 @@ class PageAllocator:
             raise ValueError("need at least 2 pages (page 0 is scratch)")
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))   # pop() -> 1, 2, ...
-        self._used: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 = free or out of range)."""
+        return self._refs.get(page, 0)
+
+    def refcounts(self) -> dict[int, int]:
+        """Snapshot of all live page refcounts (page id -> count)."""
+        return dict(self._refs)
+
     def alloc(self, n: int) -> Optional[list[int]]:
-        """Reserve n pages, or None if the pool can't cover them."""
+        """Reserve n pages at refcount 1, or None if the pool can't cover
+        them."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
-    def free(self, pages: list[int]) -> None:
+    def share(self, pages: list[int]) -> None:
+        """Take one more reference on each page of a live chain."""
         for p in pages:
-            if p not in self._used:
+            if p not in self._refs:
+                raise ValueError(f"page {p} shared but not allocated")
+        for p in pages:
+            self._refs[p] += 1
+
+    def free(self, pages: list[int]) -> None:
+        """Drop one reference per page; reclaim pages that hit zero."""
+        for p in pages:
+            if p not in self._refs:
                 raise ValueError(f"page {p} freed but not allocated")
-            self._used.discard(p)
-            self._free.append(p)
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    # -- hydration ------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able exact state (free-list order preserved, so a restored
+        allocator hands out the same pages in the same order)."""
+        return {"num_pages": self.num_pages,
+                "free": list(self._free),
+                "refs": {str(p): c for p, c in sorted(self._refs.items())}}
+
+    def load_state(self, state: Mapping[str, Any]) -> None:
+        """Restore :meth:`state_dict` output bit-exactly."""
+        if int(state["num_pages"]) != self.num_pages:
+            raise ValueError(
+                f"allocator size mismatch: snapshot has "
+                f"{state['num_pages']} pages, this pool has {self.num_pages}")
+        self._free = [int(p) for p in state["free"]]
+        self._refs = {int(p): int(c) for p, c in state["refs"].items()}
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +381,39 @@ def _insert_fused(pool, state, page_table, lengths, tokens,
     return pool, state, page_table, lengths, tokens, nxt
 
 
+def _insert_suffix_fused(pool, page_table, lengths, tokens,
+                         kv1, logits, row, shared_ids, new_ids, n_prompt,
+                         *, page_size):
+    """Shared-prefix admit tail as ONE jitted computation.
+
+    The prefix chain is already resident (refcount-shared, read-only), so
+    only the suffix KV — computed by the continuation prefill from the
+    first divergent token — is scattered, into the freshly allocated
+    ``new_ids`` pages. The table row maps shared chain + new pages; the
+    shared pages are never written, which is the copy-on-write invariant.
+    Retraces per (shared, new) page-count pair, bounded by pages_per_seq.
+    """
+    n_new = new_ids.shape[0]
+
+    def leaf(full, one):
+        layers, _, s = one.shape[:3]
+        pad = n_new * page_size - s
+        chunk = jnp.pad(one[:, 0],
+                        [(0, 0), (0, pad)] + [(0, 0)] * (one.ndim - 3))
+        chunk = chunk.reshape(layers, n_new, page_size, *one.shape[3:])
+        return full.at[:, new_ids].set(chunk.astype(full.dtype))
+
+    pool = jax.tree.map(leaf, pool, kv1)
+    pps = page_table.shape[1]
+    chain = jnp.concatenate([shared_ids, new_ids])
+    table_row = jnp.zeros((pps,), jnp.int32).at[:chain.shape[0]].set(chain)
+    page_table = page_table.at[row].set(table_row)
+    lengths = lengths.at[row].set(n_prompt)
+    nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+    tokens = tokens.at[row, 0].set(nxt)
+    return pool, page_table, lengths, tokens, nxt
+
+
 # ---------------------------------------------------------------------------
 # continuous-batching engine
 # ---------------------------------------------------------------------------
@@ -372,6 +454,9 @@ class PagedServingEngine:
         self.allocator = PageAllocator(num_pages)
         self._chains: list[list[int]] = [[] for _ in range(max_reqs)]
         self._len_host = np.zeros(max_reqs, np.int64)   # device-sync-free
+        self.prefix = prefix_lib.PrefixCache()
+        self.prefill_tokens = 0    # tokens actually run through prefill
+        self.shared_tokens = 0     # prompt tokens served from shared pages
 
         _dec = make_paged_decode(cfg, page_size)
 
@@ -384,7 +469,21 @@ class PagedServingEngine:
         self._decode = jax.jit(_step)
         self._prefill_one = jax.jit(make_prefill(cfg, max_len,
                                                  last_only=True))
+        # attention families prefill every prompt right-padded to one
+        # canonical width (prompt_len): XLA kernel rounding is
+        # shape-dependent, so a single compiled shape is what makes the
+        # prefix KV a register_prefix writes bitwise equal to the KV an
+        # unshared admit of the same tokens would write — the ground of
+        # the sharing-parity guarantee (and one prefill trace instead of
+        # one per prompt length). Recurrent families (hybrid/ssm) keep
+        # exact-length prefill: padding tokens would advance their per-row
+        # state past the real prompt.
+        self._pad_prompts = cfg.family in prefix_lib.SHAREABLE_FAMILIES
         self._insert_fused = jax.jit(partial(_insert_fused, cfg=cfg))
+        self._insert_suffix = jax.jit(
+            partial(_insert_suffix_fused, page_size=page_size))
+        self._register_insert = jax.jit(_insert_pages)
+        self._cont_prefill = None    # built on first shared admit
         self._clear_row = jax.jit(
             lambda table, lengths, row: (table.at[row].set(0),
                                          lengths.at[row].set(0)))
@@ -400,7 +499,13 @@ class PagedServingEngine:
     # -- lifecycle ----------------------------------------------------------
 
     def admit(self, req: Request) -> bool:
-        """Prefill + insert; False when no row or not enough free pages."""
+        """Prefill + insert; False when no row or not enough free pages.
+
+        When the prompt starts with a registered prefix, the shared chain
+        is mapped read-only into the row's page table (refcount +1 per
+        page) and only the divergent suffix is prefilled into fresh pages
+        — prefill cost drops from the whole prompt to the suffix.
+        """
         row = next((i for i, a in enumerate(self.active) if a is None), None)
         if row is None:
             return False
@@ -411,16 +516,45 @@ class PagedServingEngine:
                 f"request {req.rid}: prompt ({s}) + max_new ({req.max_new}) "
                 f"exceeds max_len={self.max_len}")
         n_total = -(-(s + req.max_new) // self.page_size)
-        pages = self.allocator.alloc(n_total)    # reserve the whole chain
+        entry = self.prefix.match(prompt) if self.prefix else None
+        if entry is not None:
+            # suffix >= 1 token (match is strictly shorter), so
+            # n_total > len(entry.pages) and at least one fresh page fits
+            # the first decode slot.
+            new_pages = self._alloc_pages(n_total - len(entry.pages))
+            if new_pages is None:
+                return False
+            self.allocator.share(entry.pages)
+            self._insert_shared(row, req, prompt, entry, new_pages)
+            return True
+        pages = self._alloc_pages(n_total)       # reserve the whole chain
         if pages is None:
             return False
         self._insert(row, req, prompt, pages)
         return True
 
+    def _alloc_pages(self, n: int) -> Optional[list[int]]:
+        """Allocate, evicting LRU unreferenced prefixes under pressure."""
+        pages = self.allocator.alloc(n)
+        while pages is None and self.prefix.evict_lru(self.allocator):
+            pages = self.allocator.alloc(n)
+        return pages
+
+    def _prefill_prompt(self, prompt: np.ndarray):
+        """Prefill at the canonical padded width (attention families) or
+        exact length (recurrent families). Logits are for the last *real*
+        position either way."""
+        if not self._pad_prompts:
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            return self._prefill_one(self.params, toks)
+        padded = np.zeros(self.prompt_len, np.int32)
+        padded[:len(prompt)] = prompt
+        return self._prefill_one(self.params, jnp.asarray(padded)[None, :],
+                                 jnp.int32(len(prompt)))
+
     def _insert(self, row: int, req: Request, prompt: np.ndarray,
                 pages: list[int]) -> None:
-        toks = jnp.asarray(prompt, jnp.int32)[None, :]
-        logits, cache1, _ = self._prefill_one(self.params, toks)
+        logits, cache1, _ = self._prefill_prompt(prompt)
         pool1, state1 = _split_tree(cache1, self._pool_layout,
                                     self._state_layout)
         (self.pool, self.state, self.page_table, self.lengths,
@@ -432,8 +566,80 @@ class PagedServingEngine:
         self.active[row] = req
         self._chains[row] = list(pages)
         self._len_host[row] = len(prompt)
+        self.prefill_tokens += len(prompt)
         self._state_version += 1
         self._page_versions[pages] = self._state_version
+
+    def _insert_shared(self, row: int, req: Request, prompt: np.ndarray,
+                       entry: prefix_lib.PrefixEntry,
+                       new_pages: list[int]) -> None:
+        """COW admit: continuation-prefill the suffix, scatter into fresh
+        pages, map [shared chain ; fresh pages] into the row's table."""
+        p0 = entry.length
+        if self._cont_prefill is None:
+            self._cont_prefill = jax.jit(prefix_lib.make_continue_prefill(
+                self.cfg, self.page_size))
+        shared_ids = jnp.asarray(entry.pages, jnp.int32)
+        suffix = jnp.asarray(prompt[p0:], jnp.int32)[None, :]
+        logits, kv1 = self._cont_prefill(self.params, self.pool,
+                                         shared_ids, suffix)
+        (self.pool, self.page_table, self.lengths, self.tokens,
+         nxt) = self._insert_suffix(
+            self.pool, self.page_table, self.lengths, self.tokens,
+            {"kv": kv1}, logits, jnp.int32(row), shared_ids,
+            jnp.asarray(new_pages, jnp.int32), jnp.int32(len(prompt)))
+        req.out.append(int(nxt))                 # one device sync per admit
+        self.active[row] = req
+        self._chains[row] = list(entry.pages) + list(new_pages)
+        self._len_host[row] = len(prompt)
+        self.prefill_tokens += len(prompt) - p0
+        self.shared_tokens += p0
+        self._state_version += 1
+        self._page_versions[new_pages] = self._state_version
+
+    def register_prefix(self, tokens: Any) -> str:
+        """Prefill a shared prompt prefix once and pin its page chain.
+
+        The prefix is truncated to a whole number of pages (sharing is
+        page-granular) that leaves room for at least one divergent prompt
+        token inside the prompt window. Registering the same tokens twice
+        is a no-op returning the same key. The chain is owned by the
+        prefix cache at refcount 1; each matching admit adds a reference.
+        """
+        if self.cfg.family not in prefix_lib.SHAREABLE_FAMILIES:
+            raise ValueError(
+                f"prefix sharing needs every cache leaf in the page pool; "
+                f"family {self.cfg.family!r} keeps per-row recurrent state "
+                f"that cannot be shared read-only")
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        p0 = (min(len(toks), self.prompt_len - 1)
+              // self.page_size * self.page_size)
+        if p0 < self.page_size:
+            raise ValueError(
+                f"prefix of {len(toks)} tokens is shorter than one page "
+                f"({self.page_size}) after truncation to the prompt "
+                f"window ({self.prompt_len})")
+        toks = np.ascontiguousarray(toks[:p0])
+        key = prefix_lib.prefix_key(toks)
+        if self.prefix.get(key) is not None:
+            return key
+        pages = self._alloc_pages(p0 // self.page_size)
+        if pages is None:
+            raise RuntimeError(
+                f"cannot register prefix: {p0 // self.page_size} pages "
+                f"needed, {self.allocator.free_pages} free")
+        logits, cache1, _ = self._prefill_prompt(toks)
+        del logits                               # chain ends mid-prompt
+        pool1, _ = _split_tree(cache1, self._pool_layout,
+                               self._state_layout)
+        self.pool = self._register_insert(self.pool, pool1,
+                                          jnp.asarray(pages, jnp.int32))
+        self.prefill_tokens += p0
+        self._state_version += 1
+        self._page_versions[pages] = self._state_version
+        self.prefix.add(prefix_lib.PrefixEntry(key=key, tokens=toks,
+                                               pages=list(pages)))
+        return key
 
     def free_resource(self, row: int) -> None:
         """Return the chain to the pool and point the row at scratch."""
@@ -480,6 +686,7 @@ class PagedServingEngine:
 
     def page_stats(self) -> dict[str, float]:
         used = (self.num_pages - 1) - self.allocator.free_pages
+        refs = self.allocator.refcounts()
         return {
             "num_pages": self.num_pages,
             "free_pages": self.allocator.free_pages,
@@ -488,20 +695,150 @@ class PagedServingEngine:
             "active_requests": sum(a is not None for a in self.active),
             "occupancy": (sum(a is not None for a in self.active)
                           / self.max_reqs),
+            "shared_pages": sum(1 for c in refs.values() if c > 1),
         }
 
+    def prefix_stats(self) -> dict[str, Any]:
+        """Prefix-cache effectiveness: hit rate, sharing, tokens saved.
+
+        ``pages_saved`` counts extra references — pages a request mapped
+        instead of allocating+prefilling its own copy. ``shared_tokens``
+        is the prompt-token count served from shared pages (the prefill
+        work sharing avoided); ``prefill_tokens`` is what actually ran.
+        """
+        refs = self.allocator.refcounts()
+        st = self.prefix.stats()
+        st.update({
+            "shared_pages": sum(1 for c in refs.values() if c > 1),
+            "pages_saved": sum(c - 1 for c in refs.values()),
+            "prefill_tokens": self.prefill_tokens,
+            "shared_tokens": self.shared_tokens,
+        })
+        return st
+
     def snapshot_payload(self) -> dict[str, Any]:
-        """serve_snapshot payload: pool + state + tables, page-aligned.
+        """serve_snapshot payload: pool + state + tables + host metadata.
 
         ``chunk_hints`` sizes each pool leaf's delta chunks to one
         (layer, page) slab and ``page_versions`` records which pages moved,
         so unchanged pages frame as zero-payload COPY ops in the store.
+
+        The ``meta`` leaf is the host-side engine state as JSON bytes —
+        allocator free list + refcounts, request chains, in-flight
+        requests, registered prefixes — everything :meth:`from_snapshot`
+        needs to hydrate a cold replica that serves its next token without
+        re-prefilling (its byte length varies, which the delta codec
+        handles by framing it self-contained whenever it changes size).
         """
+        meta = {
+            "engine": {"num_pages": self.num_pages,
+                       "page_size": self.page_size,
+                       "max_reqs": self.max_reqs,
+                       "prompt_len": self.prompt_len,
+                       "max_len": self.max_len},
+            "allocator": self.allocator.state_dict(),
+            "chains": [list(c) for c in self._chains],
+            "len_host": self._len_host.tolist(),
+            "active": [None if a is None else
+                       {"rid": a.rid,
+                        "prompt": np.asarray(a.prompt).tolist(),
+                        "max_new": a.max_new, "out": list(a.out)}
+                       for a in self.active],
+            "prefix": self.prefix.state_dict(),
+            "counters": {"prefill_tokens": self.prefill_tokens,
+                         "shared_tokens": self.shared_tokens},
+            "version": self._state_version,
+            "page_versions": self._page_versions.tolist(),
+        }
+        meta_leaf = np.frombuffer(json.dumps(meta).encode(), np.uint8)
         cache = {"pool": self.pool, "state": self.state,
-                 "page_table": self.page_table, "lengths": self.lengths}
+                 "page_table": self.page_table, "lengths": self.lengths,
+                 "tokens": self.tokens, "meta": meta_leaf}
         return {"cache": cache, "version": self._state_version,
                 "page_versions": self._page_versions.copy(),
                 "chunk_hints": dict(self._chunk_hints)}
+
+    # -- replica hydration ----------------------------------------------------
+
+    @classmethod
+    def from_snapshot(cls, cfg: ModelConfig, params,
+                      leaves: Mapping[str, np.ndarray]
+                      ) -> "PagedServingEngine":
+        """Rebuild an engine from a restored ``kv_pages`` snapshot.
+
+        ``leaves`` is ``SnapshotStore.restore``'s flattened-key mapping.
+        The ``meta`` leaf fixes the engine geometry and the host state;
+        the array leaves refill the device slabs bit-exactly. The result
+        decodes in lockstep with the producer at snapshot time: same page
+        pool, same tables, same in-flight requests, same registered
+        prefixes — first token without any prefill.
+        """
+        try:
+            meta_leaf = leaves["['meta']"]
+        except KeyError:
+            raise KeyError(
+                "snapshot has no 'meta' leaf — it was published by an "
+                "engine without hydration metadata (pre-prefix-sharing "
+                "chain); re-publish from a current engine") from None
+        meta = json.loads(np.asarray(meta_leaf, np.uint8).tobytes())
+        eng = cls(cfg, params, **{k: int(v)
+                                  for k, v in meta["engine"].items()})
+        eng._apply_snapshot(leaves, meta)
+        return eng
+
+    def load_snapshot(self, leaves: Mapping[str, np.ndarray]) -> None:
+        """Re-hydrate *this* engine in place from a restored snapshot.
+
+        Same effect as :meth:`from_snapshot` but reuses the engine's
+        compiled decode/prefill functions (jit caches are per-instance) —
+        the warm path for repeated catch-up from a newer chain point, and
+        what TTFT benchmarks time so they measure restore work rather
+        than retracing.
+        """
+        meta = json.loads(np.asarray(leaves["['meta']"], np.uint8).tobytes())
+        geo = {k: int(v) for k, v in meta["engine"].items()}
+        mine = {"num_pages": self.num_pages, "page_size": self.page_size,
+                "max_reqs": self.max_reqs, "prompt_len": self.prompt_len,
+                "max_len": self.max_len}
+        if geo != mine:
+            raise ValueError(f"snapshot geometry {geo} does not match "
+                             f"this engine {mine}; use from_snapshot()")
+        self._apply_snapshot(leaves, meta)
+
+    def _apply_snapshot(self, leaves: Mapping[str, np.ndarray],
+                        meta: Mapping[str, Any]) -> None:
+        template = {"pool": self.pool, "state": self.state,
+                    "page_table": self.page_table, "lengths": self.lengths,
+                    "tokens": self.tokens}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in flat:
+            key = jax.tree_util.keystr(path)
+            if key not in leaves:
+                raise KeyError(f"snapshot is missing leaf {key} "
+                               f"(engine geometry drifted since publish)")
+            out.append(jnp.asarray(leaves[key], leaf.dtype))
+        restored = jax.tree_util.tree_unflatten(treedef, out)
+        self.pool = restored["pool"]
+        self.state = restored["state"]
+        self.page_table = restored["page_table"]
+        self.lengths = restored["lengths"]
+        self.tokens = restored["tokens"]
+        self.allocator.load_state(meta["allocator"])
+        self._chains = [[int(p) for p in c] for c in meta["chains"]]
+        self._len_host = np.asarray(meta["len_host"], np.int64)
+        self.active = [
+            None if a is None else Request(
+                rid=int(a["rid"]),
+                prompt=np.asarray(a["prompt"], np.int32),
+                max_new=int(a["max_new"]),
+                out=[int(t) for t in a["out"]])
+            for a in meta["active"]]
+        self.prefix.load_state(meta["prefix"])
+        self.prefill_tokens = int(meta["counters"]["prefill_tokens"])
+        self.shared_tokens = int(meta["counters"]["shared_tokens"])
+        self._state_version = int(meta["version"])
+        self._page_versions = np.asarray(meta["page_versions"], np.int64)
 
     def insitu_providers(self) -> dict[str, Callable[[], Any]]:
         return {"serving_state": lambda: {"pool": self.pool,

@@ -459,3 +459,65 @@ def test_engine_report_matches_session_report_keys():
         assert key in rep
     assert rep["n_results"] == 4
     assert rep["tasks"]["t"]["stream"] == "x"
+
+
+# ---------------------------------------------------------------------------
+# steering validation: invalid commands are rejected and counted, never
+# half-applied (consumers can push anything up the back-channel)
+# ---------------------------------------------------------------------------
+
+def _steering_session():
+    plan = InSituPlan.from_dict({
+        "streams": ["grads"],
+        "tasks": {"gh": {"stream": "grads", "preset": "grad_health",
+                         "every": 2, "placement": "sync"}},
+    })
+    return Session(plan, raise_on_error=True)
+
+
+def test_steering_rejects_bad_every_and_unknown_task():
+    with _steering_session() as s:
+        before = s.runtime.effective_every("gh")
+        for msg in ({"task": "gh", "every": 0},
+                    {"task": "gh", "every": -3},
+                    {"task": "gh", "every": "soon"},
+                    {"task": "nosuch", "every": 2}):
+            rec = s._apply_steering("test", msg)
+            s._steering.append(rec)
+            assert "every" in rec["rejected"], msg
+            assert rec["applied"] == {}
+        assert s.runtime.effective_every("gh") == before   # untouched
+        s.emit("grads", 0, {"params": np.zeros(8, np.float32)})
+    st = s.report()["steering"]
+    assert st["steering_rejected"] == 4
+    assert len(st["commands"]) == 4
+
+
+def test_steering_rejects_nonfinite_lossy_eps():
+    """``nan <= 0`` is False — the guard must be isfinite, not a plain
+    comparison, or NaN walks straight into the lossy codec."""
+    with _steering_session() as s:
+        for bad in (float("nan"), float("inf"), -1.0, 0.0, "tight"):
+            rec = s._apply_steering("test", {"task": "gh",
+                                             "lossy_eps": bad})
+            s._steering.append(rec)
+            assert "lossy_eps" in rec["rejected"], bad
+        # valid value but no checkpoint task bound: ignored, not rejected
+        rec = s._apply_steering("test", {"task": "gh", "lossy_eps": 0.5})
+        s._steering.append(rec)
+        assert rec["ignored"] == {"lossy_eps": 0.5}
+        assert rec["rejected"] == {}
+        s.emit("grads", 0, {"params": np.zeros(8, np.float32)})
+    assert s.report()["steering"]["steering_rejected"] == 5
+
+
+def test_steering_valid_command_still_applies():
+    with _steering_session() as s:
+        rec = s._apply_steering("test", {"task": "gh", "every": 4})
+        s._steering.append(rec)
+        assert rec["applied"] == {"every": 4} and rec["rejected"] == {}
+        assert s.runtime.effective_every("gh") == 4
+        s.emit("grads", 0, {"params": np.zeros(8, np.float32)})
+    st = s.report()["steering"]
+    assert st["steering_rejected"] == 0
+    assert st["commands"][0]["applied"] == {"every": 4}

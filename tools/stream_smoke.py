@@ -95,10 +95,13 @@ def main() -> int:
               f"digest {local['digest'][:16]}... on both sides")
 
     # 2. steering applied mid-run on the producer
-    steering = rep.get("steering", [])
-    applied = [s for s in steering if s.get("applied", {}).get("every") == 2]
+    steering = rep.get("steering", {})
+    commands = steering.get("commands", [])
+    applied = [s for s in commands if s.get("applied", {}).get("every") == 2]
     if not applied:
         failures.append(f"steering not applied by the producer: {steering}")
+    elif steering.get("steering_rejected", 0):
+        failures.append(f"valid steering counted as rejected: {steering}")
     else:
         print(f"steering OK: {applied[0]}")
 
