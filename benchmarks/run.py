@@ -8,6 +8,7 @@ across PRs.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -69,22 +70,35 @@ def main() -> None:
             print(f"# {name} FAILED: {e}")
     tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving",
                "prefix_sharing", "fault", "stream_sink")
-    if not quick and all(name in results for name in tracked):
-        # only an unfiltered --full run refreshes the tracked perf artifact
-        # (quick-mode numbers are not comparable across PRs, and a --only
-        # subset would silently drop another bench's tracked section)
-        artifact = dict(results["runtime"])
-        artifact["checkpoint_io"] = results["checkpoint_io"]
-        artifact["snapshot_delta"] = results["snapshot_delta"]
-        artifact["serving"] = results["serving"]
-        artifact["prefix_sharing"] = results["prefix_sharing"]
-        artifact["fault"] = results["fault"]
-        artifact["stream_sink"] = results["stream_sink"]
+    if not quick and not args.only and "runtime" in results:
+        # only an unfiltered --full run refreshes the tracked perf
+        # artifact (quick-mode numbers are not comparable across PRs, and
+        # a --only subset would silently drop another bench's tracked
+        # section). Sections whose bench failed this run keep their
+        # previously recorded numbers instead of blocking the whole
+        # refresh — one flaky perf gate must not silently drop every
+        # other bench's fresh numbers — and are named as stale below;
+        # the nonzero exit still reports the failures themselves.
+        try:
+            with open(handoff_overlap.ARTIFACT) as f:
+                artifact = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            artifact = {}
+        artifact.update(results["runtime"])
+        stale = []
+        for name in tracked:
+            if name == "runtime":
+                continue
+            if name in results:
+                artifact[name] = results[name]
+            elif name in artifact:
+                stale.append(name)
         handoff_overlap.write_artifact(artifact)
-        print(f"# wrote {handoff_overlap.ARTIFACT}")
+        note = f" (kept stale: {', '.join(stale)})" if stale else ""
+        print(f"# wrote {handoff_overlap.ARTIFACT}{note}")
     elif not quick and args.only:
         print(f"# --only filter active: {handoff_overlap.ARTIFACT} "
-              f"not refreshed (needs {', '.join(tracked)})")
+              f"not refreshed (needs an unfiltered --full run)")
     if failures:
         sys.exit(f"{len(failures)} benchmarks failed")
 

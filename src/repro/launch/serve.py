@@ -143,10 +143,15 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
             for i in range(n_requests)]
 
     # a hydrated engine carries the producer's in-flight requests — they
-    # drain through the same loop and count toward the serve totals
+    # drain through the same loop and count toward the serve totals, but
+    # tokens the producer already generated (in req.out at hydration
+    # time) are not this replica's work and stay out of its tok/s
     pending = list(requests)
+    carried_toks = 0
     if hydrate_info is not None:
-        requests = [a for a in engine.active if a is not None] + requests
+        carried = [a for a in engine.active if a is not None]
+        carried_toks = sum(len(r.out) for r in carried)
+        requests = carried + requests
     step = 0
     t0 = time.perf_counter()
     with Session(plan, telemetry=tm, raise_on_error=True) as session:
@@ -164,7 +169,7 @@ def serve_loop(arch: str, *, n_requests: int = 8, max_new: int = 8,
                 break
     total = time.perf_counter() - t0
     done = sum(1 for r in requests if r.done)
-    toks = sum(len(r.out) for r in requests)
+    toks = sum(len(r.out) for r in requests) - carried_toks
     rep = session.report()
     prefix_stats = None
     if engine_kind == "paged":

@@ -391,15 +391,22 @@ def _insert_suffix_fused(pool, page_table, lengths, tokens,
     first divergent token — is scattered, into the freshly allocated
     ``new_ids`` pages. The table row maps shared chain + new pages; the
     shared pages are never written, which is the copy-on-write invariant.
-    Retraces per (shared, new) page-count pair, bounded by pages_per_seq.
+    The suffix KV arrives at the canonical padded width, which may be
+    narrower (pad to the page budget, the new pages also cover decode
+    slots) or wider (slice; the tail is never-attended pad junk) than
+    ``n_new * page_size``. Retraces per (shared, new) page-count pair,
+    bounded by pages_per_seq.
     """
     n_new = new_ids.shape[0]
 
     def leaf(full, one):
-        layers, _, s = one.shape[:3]
-        pad = n_new * page_size - s
-        chunk = jnp.pad(one[:, 0],
-                        [(0, 0), (0, pad)] + [(0, 0)] * (one.ndim - 3))
+        layers = one.shape[0]
+        want = n_new * page_size
+        chunk = one[:, 0, :want]
+        pad = want - chunk.shape[1]
+        if pad > 0:
+            chunk = jnp.pad(chunk,
+                            [(0, 0), (0, pad)] + [(0, 0)] * (chunk.ndim - 2))
         chunk = chunk.reshape(layers, n_new, page_size, *one.shape[3:])
         return full.at[:, new_ids].set(chunk.astype(full.dtype))
 
@@ -520,11 +527,16 @@ class PagedServingEngine:
         if entry is not None:
             # suffix >= 1 token (match is strictly shorter), so
             # n_total > len(entry.pages) and at least one fresh page fits
-            # the first decode slot.
+            # the first decode slot. The shared reference is taken BEFORE
+            # allocating: _alloc_pages evicts refcount-1 prefix chains
+            # under pool pressure, and the matched entry is refcount-1
+            # until this request references it — sharing first (refcount
+            # 2) keeps it off the eviction list while the admit needs it.
+            self.allocator.share(entry.pages)
             new_pages = self._alloc_pages(n_total - len(entry.pages))
             if new_pages is None:
+                self.allocator.free(entry.pages)   # roll the share back
                 return False
-            self.allocator.share(entry.pages)
             self._insert_shared(row, req, prompt, entry, new_pages)
             return True
         pages = self._alloc_pages(n_total)       # reserve the whole chain
@@ -580,9 +592,18 @@ class PagedServingEngine:
             self._cont_prefill = jax.jit(prefix_lib.make_continue_prefill(
                 self.cfg, self.page_size))
         shared_ids = jnp.asarray(entry.pages, jnp.int32)
-        suffix = jnp.asarray(prompt[p0:], jnp.int32)[None, :]
+        # suffixes right-pad to ONE canonical width — the longest suffix
+        # any registered prefix can leave (prompt_len - page_size) — so
+        # every shared admit runs one compiled continuation shape per
+        # prefix, mirroring the padded full prefill: XLA rounding must
+        # not depend on this request's suffix length.
+        suffix = prompt[p0:]
+        padded = np.zeros(self.prompt_len - self.page_size, np.int32)
+        padded[:len(suffix)] = suffix
         logits, kv1 = self._cont_prefill(self.params, self.pool,
-                                         shared_ids, suffix)
+                                         shared_ids,
+                                         jnp.asarray(padded)[None, :],
+                                         jnp.int32(len(suffix)))
         (self.pool, self.page_table, self.lengths, self.tokens,
          nxt) = self._insert_suffix(
             self.pool, self.page_table, self.lengths, self.tokens,
@@ -640,6 +661,15 @@ class PagedServingEngine:
         self.prefix.add(prefix_lib.PrefixEntry(key=key, tokens=toks,
                                                pages=list(pages)))
         return key
+
+    def unregister_prefix(self, key: str) -> bool:
+        """Drop a registered prefix (by the key ``register_prefix``
+        returned): the cache's own reference is released and new admits
+        stop matching it. In-flight requests that already map the chain
+        keep their refcounts — the pages return to the pool when the last
+        of them completes. Unknown keys return False.
+        """
+        return self.prefix.drop(key, self.allocator)
 
     def free_resource(self, row: int) -> None:
         """Return the chain to the pool and point the row at scratch."""

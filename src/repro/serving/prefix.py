@@ -148,11 +148,15 @@ class PrefixCache:
                 return True
         return False
 
-    def drop(self, key: str, allocator: Any) -> None:
+    def drop(self, key: str, allocator: Any) -> bool:
         """Unregister one prefix (frees its cache reference; shared users
-        keep their refcounts and pages until they complete)."""
-        e = self._entries.pop(key)
+        keep their refcounts and pages until they complete). Unknown keys
+        are a no-op returning False."""
+        e = self._entries.pop(key, None)
+        if e is None:
+            return False
         allocator.free(e.pages)
+        return True
 
     def stats(self) -> dict[str, Any]:
         total = self.hits + self.misses
@@ -232,22 +236,32 @@ def _mla_cont_attn(p, xn, cfg: ModelConfig, positions, pkv, p0):
 
 
 def make_continue_prefill(cfg: ModelConfig, page_size: int):
-    """cont(params, pool, page_ids, tokens (1,S)) -> (last logits, suffix kv).
+    """cont(params, pool, page_ids, tokens (1,S)[, last_pos])
+    -> (last-real-position logits, suffix kv).
 
     Prefills the divergent suffix of a prompt whose first
     ``page_ids.shape[0] * page_size`` tokens are already resident in the
     page pool as a shared chain. The prefix KV is gathered from the pool
     *inside* the jit, so the caller never materializes it; only the
     suffix's own KV comes back (per-layer leaves ``(L, 1, S, ...)``) for
-    scattering into the request's fresh pages. Retraces per
-    (page count, suffix length) pair — both bounded by the engine windows.
+    scattering into the request's fresh pages.
+
+    ``last_pos`` (traced) selects the logits of suffix position
+    ``last_pos - 1`` instead of ``-1`` — for callers that right-pad every
+    suffix to one canonical width, the same single-compiled-shape
+    discipline ``make_prefill``'s padded path uses: XLA kernel rounding
+    is shape-dependent, so one suffix shape per prefix is what keeps a
+    shared admit's KV and first-token logits bitwise independent of this
+    request's suffix length (causal attention makes real positions
+    independent of the zero-padded tail). With padded suffixes the
+    continuation retraces per prefix page count only.
     """
     if cfg.family not in SHAREABLE_FAMILIES:
         raise ValueError(
             f"prefix sharing requires a fully paged cache; family "
             f"{cfg.family!r} keeps per-row recurrent state")
 
-    def cont(params, pool, page_ids, tokens):
+    def cont(params, pool, page_ids, tokens, last_pos=None):
         b, s = tokens.shape
         p0 = page_ids.shape[0] * page_size     # static -> positions static
         h = embed(params["embed"], tokens)
@@ -293,7 +307,11 @@ def make_continue_prefill(cfg: ModelConfig, page_size: int):
                                   cfg.scan_layers)
 
         h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-        logits = unembed(params["embed"], h[:, -1:], cfg.vocab_size)
+        if last_pos is not None:
+            h = jax.lax.dynamic_slice_in_dim(h, last_pos - 1, 1, axis=1)
+        else:
+            h = h[:, -1:]
+        logits = unembed(params["embed"], h, cfg.vocab_size)
         return logits, kv
 
     return cont

@@ -274,6 +274,93 @@ def test_admit_evicts_lru_prefix_under_pressure():
     assert req.done
 
 
+def test_matching_admit_under_pressure_never_evicts_its_own_prefix():
+    """A shared admit must not LRU-evict the very prefix it just matched:
+    the shared reference is taken before suffix allocation, so under
+    pressure the matched chain is refcount-2 (never an eviction
+    candidate) and a pool that can't fit the suffix rejects cleanly —
+    allocator and prefix cache bit-identical to before the attempt."""
+    cfg, prm = _mk("smollm-135m")
+    eng = _mk_engine(cfg, prm, num_pages=4, prompt_len=24, max_len=48)
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, size=16)
+    key = eng.register_prefix(prefix)
+    blocker = Request(0, rng.integers(0, cfg.vocab_size, size=16),
+                      max_new=16)
+    assert eng.admit(blocker)                   # 2 pages -> pool exhausted
+    assert eng.allocator.free_pages == 0
+    req = Request(1, np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, size=4)]), max_new=8)
+    before_alloc = eng.allocator.state_dict()
+    before_pages = list(eng.prefix.get(key).pages)
+    assert not eng.admit(req)                   # clean rejection, no evict
+    assert eng.allocator.state_dict() == before_alloc
+    assert eng.prefix.get(key) is not None
+    assert eng.prefix.get(key).pages == before_pages
+    assert eng.prefix.stats()["evictions"] == 0
+    for _ in range(32):                          # drain the blocker
+        if blocker.done:
+            break
+        eng.step()
+    assert blocker.done
+    assert eng.admit(req)                        # now it shares normally
+    assert eng.allocator.refcount(before_pages[0]) == 2
+    for _ in range(16):
+        if req.done:
+            break
+        eng.step()
+    assert req.done
+
+
+def test_unregister_prefix_releases_cache_reference():
+    cfg, prm = _mk("smollm-135m")
+    eng = _mk_engine(cfg, prm)
+    rng = np.random.default_rng(8)
+    prefix = rng.integers(0, cfg.vocab_size, size=16)
+    key = eng.register_prefix(prefix)
+    req = _mk_requests(cfg, rng, 1, prefix, max_new=4)[0]
+    assert eng.admit(req)
+    page = eng.prefix.get(key).pages[0]
+    assert eng.unregister_prefix(key)
+    assert eng.prefix.get(key) is None           # new admits stop matching
+    assert eng.allocator.refcount(page) == 1     # in-flight req still maps
+    assert not eng.unregister_prefix(key)        # unknown key: no-op False
+    for _ in range(8):
+        if req.done:
+            break
+        eng.step()
+    assert req.done
+    assert eng.allocator.refcount(page) == 0     # last reference released
+    assert eng.allocator.free_pages == eng.num_pages - 1
+
+
+def test_shared_admits_varying_suffix_lengths_one_trace():
+    """Suffixes of different lengths pad to one canonical width: every
+    shared admit runs the same compiled continuation shape and still
+    matches the unshared engine token-for-token."""
+    cfg, prm = _mk("smollm-135m")
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab_size, size=16)
+    a = [Request(i, np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, size=tail)]), max_new=4)
+        for i, tail in enumerate((1, 3, 5, 7))]
+    b = [Request(r.rid, r.prompt.copy(), max_new=r.max_new) for r in a]
+
+    plain = _mk_engine(cfg, prm)
+    plain.run(a, max_steps=64)
+    shared = _mk_engine(cfg, prm)
+    shared.register_prefix(prefix)
+    shared.run(b, max_steps=64)
+
+    for ra, rb in zip(a, b):
+        assert ra.done and rb.done
+        assert ra.out == rb.out, (
+            f"request {ra.rid} (suffix {len(ra.prompt) - 16}) diverged")
+    assert shared.prefix_stats()["hits"] == 4
+    if hasattr(shared._cont_prefill, "_cache_size"):
+        assert shared._cont_prefill._cache_size() == 1
+
+
 # ---------------------------------------------------------------------------
 # allocator + engine state round-trips bit-exactly through snapshots
 # ---------------------------------------------------------------------------
