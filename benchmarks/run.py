@@ -29,9 +29,9 @@ def main() -> None:
                             fig07_sync_compression, fig08_hybrid_compression,
                             fig09_compression_scaling,
                             fig10_12_qe_checkpoint, handoff_overlap,
-                            lossy_ratio, prefix_sharing, roofline,
-                            serving_throughput, snapshot_delta, stream_sink,
-                            tab2_codecs)
+                            kernel_roofline, lossy_ratio, prefix_sharing,
+                            roofline, serving_throughput, snapshot_delta,
+                            stream_sink, tab2_codecs)
 
     benches = [
         ("fig02", fig02_cpu_sync_vs_async.run),
@@ -46,6 +46,7 @@ def main() -> None:
         ("tab2", tab2_codecs.run),
         ("lossy_ratio", lossy_ratio.run),
         ("roofline", roofline.run),
+        ("kernel_roofline", kernel_roofline.run),
         ("runtime", handoff_overlap.run),
         ("checkpoint_io", checkpoint_io.run),
         ("snapshot_delta", snapshot_delta.run),
@@ -69,7 +70,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"# {name} FAILED: {e}")
     tracked = ("runtime", "checkpoint_io", "snapshot_delta", "serving",
-               "prefix_sharing", "fault", "stream_sink")
+               "prefix_sharing", "fault", "stream_sink", "kernel_roofline")
     if not quick and not args.only and "runtime" in results:
         # only an unfiltered --full run refreshes the tracked perf
         # artifact (quick-mode numbers are not comparable across PRs, and

@@ -93,6 +93,17 @@ def available() -> list[str]:
     return sorted(_COMPRESSORS)
 
 
+def compressor(codec: str) -> tuple[int, Callable[[bytes], bytes],
+                                    Callable[[bytes], bytes]]:
+    """(codec id, compress, decompress) for ``codec`` — the hook streamed
+    framing paths use to compress chunk buffers they produced themselves
+    (e.g. device-sliced int8 chunks) while keeping the frame format
+    identical to ``encode``."""
+    if codec not in _COMPRESSORS:
+        raise KeyError(f"unknown codec {codec!r}; available: {available()}")
+    return _COMPRESSORS[codec]
+
+
 # ---------------------------------------------------------------------------
 # shared chunk pool: one lazily-created executor the checkpoint encode stage
 # and restore path fan chunk (de)compression out on. GIL-released stdlib
@@ -163,6 +174,27 @@ def _chunk_views(arr: np.ndarray, chunk_bytes: int) -> list[memoryview]:
             for off in range(0, len(mv), chunk_bytes)]
 
 
+def assemble_frame(codec: str, dtype, shape, raw_nbytes: int,
+                   chunk_bytes: int, payloads: list[bytes]) -> bytes:
+    """Assemble a v2 frame from already-compressed chunk payloads.
+
+    Byte-identical to ``encode()`` of the same logical array — streamed
+    producers (per-chunk D2H + compress) share the exact frame layout."""
+    cid, _, _ = compressor(codec)
+    dt = _dtype_token(np.dtype(dtype))
+    ndim = len(shape)
+    parts = [
+        MAGIC,
+        struct.pack("<BBB", _VERSION, cid, len(dt)), dt,
+        struct.pack("<B", ndim),
+        struct.pack(f"<{ndim}q", *shape),
+        struct.pack("<qqI", raw_nbytes, int(chunk_bytes), len(payloads)),
+        struct.pack(f"<{len(payloads)}I", *(len(p) for p in payloads)),
+        *payloads,
+    ]
+    return b"".join(parts)
+
+
 def encode(arr: np.ndarray, codec: str = "zlib", *,
            chunk_bytes: int = DEFAULT_CHUNK,
            pool: Optional[ThreadPoolExecutor] = None
@@ -172,26 +204,15 @@ def encode(arr: np.ndarray, codec: str = "zlib", *,
     ``pool`` (e.g. ``codec_pool()``) compresses the chunks of a multi-chunk
     array concurrently; the frame layout is identical either way.
     """
-    if codec not in _COMPRESSORS:
-        raise KeyError(f"unknown codec {codec!r}; available: {available()}")
-    cid, comp, _ = _COMPRESSORS[codec]
+    _, comp, _ = compressor(codec)
     arr = np.ascontiguousarray(arr)
     views = _chunk_views(arr, int(chunk_bytes))
     if pool is not None and len(views) > 1:
         payloads = list(pool.map(comp, views))
     else:
         payloads = [comp(v) for v in views]
-    dt = _dtype_token(arr.dtype)
-    parts = [
-        MAGIC,
-        struct.pack("<BBB", _VERSION, cid, len(dt)), dt,
-        struct.pack("<B", arr.ndim),
-        struct.pack(f"<{arr.ndim}q", *arr.shape),
-        struct.pack("<qqI", arr.nbytes, int(chunk_bytes), len(payloads)),
-        struct.pack(f"<{len(payloads)}I", *(len(p) for p in payloads)),
-        *payloads,
-    ]
-    blob = b"".join(parts)
+    blob = assemble_frame(codec, arr.dtype, arr.shape, arr.nbytes,
+                          int(chunk_bytes), payloads)
     return blob, CompressionStats(codec, arr.nbytes, len(blob))
 
 

@@ -55,6 +55,19 @@ def error_bound(eps: float) -> float:
 # single tensor: device lossy stage -> host lossless stage -> framed bytes
 # ---------------------------------------------------------------------------
 
+def _lossy_header(dtype, n_elements: int, shape: tuple,
+                  qlen: int, slen: int) -> bytes:
+    dt = jnp.dtype(dtype).name.encode()   # name token: handles bf16
+    return LOSSY_MAGIC + struct.pack("<B", len(dt)) + dt + struct.pack(
+        "<qB", n_elements, len(shape)) + struct.pack(
+        f"<{len(shape)}q", *shape) + struct.pack("<qq", qlen, slen)
+
+
+def _raw_bytes(dtype, shape: tuple) -> int:
+    return (int(np.prod(shape)) if shape else 1) \
+        * np.dtype(jnp.dtype(dtype)).itemsize
+
+
 def frame_compressed(c: ref.Compressed, lossless: str = "zlib",
                      pool=None) -> tuple[bytes, LossyStats]:
     """Host lossless stage: pack a device-produced Compressed into bytes.
@@ -67,20 +80,70 @@ def frame_compressed(c: ref.Compressed, lossless: str = "zlib",
     q_blob, _ = codecs.encode(q, lossless, pool=pool)
     s_blob, _ = codecs.encode(scale, lossless, pool=pool)
     shape = tuple(int(d) for d in c.shape)
-    dt = jnp.dtype(c.dtype).name.encode()   # name token: handles bf16
-    header = LOSSY_MAGIC + struct.pack("<B", len(dt)) + dt + struct.pack(
-        "<qB", c.n_elements, len(shape)) + struct.pack(
-        f"<{len(shape)}q", *shape) + struct.pack("<qq", len(q_blob), len(s_blob))
+    header = _lossy_header(c.dtype, c.n_elements, shape,
+                           len(q_blob), len(s_blob))
     blob = header + q_blob + s_blob
-    raw = (int(np.prod(shape)) if shape else 1) \
-        * np.dtype(jnp.dtype(c.dtype)).itemsize
-    return blob, LossyStats(raw, len(blob), float(np.mean(q != 0)))
+    return blob, LossyStats(_raw_bytes(c.dtype, shape), len(blob),
+                            float(np.mean(q != 0)))
+
+
+def _frame_chunked_q(chunks, lossless: str, pool=None) -> tuple[bytes, float]:
+    """Streamed host lossless stage for device-chunked int8 coefficients.
+
+    Every chunk's D2H copy is started up front, then each chunk is
+    losslessly compressed as soon as it lands on the host — the framing
+    never synchronises on one monolithic coefficient buffer. The frame is
+    byte-identical to ``codecs.encode(concat(chunks))`` because the device
+    chunks are cut at the codec's own chunk boundary.
+
+    Returns ``(frame bytes, kept fraction)``.
+    """
+    _, comp, _ = codecs.compressor(lossless)
+    for ch in chunks:
+        if hasattr(ch, "copy_to_host_async"):
+            ch.copy_to_host_async()
+    use_pool = pool is not None and len(chunks) > 1
+    nonzero = total = 0
+    pending = []
+    for ch in chunks:
+        a = np.asarray(ch)            # waits for *this* chunk only
+        nonzero += int(np.count_nonzero(a))
+        total += a.size
+        view = codecs._byte_view(a)
+        pending.append(pool.submit(comp, view) if use_pool else comp(view))
+    payloads = [p.result() for p in pending] if use_pool else pending
+    n_blocks = sum(int(ch.shape[0]) for ch in chunks)
+    blob = codecs.assemble_frame(lossless, np.int8, (n_blocks, ref.BLOCK),
+                                 n_blocks * ref.BLOCK, codecs.DEFAULT_CHUNK,
+                                 payloads)
+    return blob, nonzero / max(total, 1)
 
 
 def compress_tensor(x: jax.Array | np.ndarray, eps: float = 1e-2,
                     lossless: str = "zlib",
-                    measure: bool = False, pool=None) -> tuple[bytes, LossyStats]:
+                    measure: bool = False, pool=None,
+                    stream: bool | None = None) -> tuple[bytes, LossyStats]:
+    """Device lossy stage + host lossless stage for one tensor.
+
+    ``stream`` (default: auto — multi-chunk payloads without ``measure``)
+    uses the fused quantize+chunking kernel path: the int8 coefficients
+    leave the device pre-split at codec chunk boundaries and are framed
+    chunk-by-chunk, overlapping D2H with lossless packing. Output bytes are
+    identical either way.
+    """
     x = jnp.asarray(x)
+    if stream is None:
+        stream = not measure and x.size > codecs.DEFAULT_CHUNK
+    if stream and not measure:
+        chunks, scale, n = ops.spectral_compress_chunked(
+            x, eps, chunk_blocks=codecs.DEFAULT_CHUNK // ref.BLOCK)
+        q_blob, kept = _frame_chunked_q(chunks, lossless, pool)
+        s_blob, _ = codecs.encode(np.asarray(scale), lossless, pool=pool)
+        shape = tuple(int(d) for d in x.shape)
+        header = _lossy_header(x.dtype, n, shape, len(q_blob), len(s_blob))
+        blob = header + q_blob + s_blob
+        return blob, LossyStats(_raw_bytes(x.dtype, shape), len(blob),
+                                float(kept))
     c = ops.spectral_compress(x, eps)                # device lossy stage
     blob, st = frame_compressed(c, lossless, pool)   # host lossless stage
     if measure:

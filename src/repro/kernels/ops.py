@@ -45,8 +45,80 @@ def _pad_to_rows(xb: jax.Array, rows: int) -> jax.Array:
     return xb
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def _compress_padded(xb: jax.Array, eps: float, interpret: bool):
+# ---------------------------------------------------------------------------
+# Tile autotuning. Keyed by the same pow2 shape buckets as the fused-tree
+# trace cache, so a tile is measured at most once per bucket per process.
+# Off-TPU the defaults are returned untouched (interpret-mode timings would
+# tune the python interpreter, not the hardware).
+# ---------------------------------------------------------------------------
+
+_TILE_CANDIDATES = {"hist": (8, 16, 32), "quant": (32, 64, 128, 256)}
+_DEFAULT_TILE = {"hist": K.HIST_TILE, "quant": K.QUANT_TILE}
+_TUNED: dict[tuple, int] = {}
+
+
+def _measure_tile(kind: str, bucket_rows: int) -> int:
+    """Time each candidate tile on the real kernel at the bucket shape and
+    keep the fastest. Candidates and buckets are both powers of two, so no
+    candidate ever needs padding."""
+    import time as _time
+    cands = [t for t in _TILE_CANDIDATES[kind] if t <= bucket_rows]
+    if not cands:
+        return min(_TILE_CANDIDATES[kind])
+    best, best_dt = cands[0], float("inf")
+    xb = jnp.ones((bucket_rows, BLOCK), jnp.float32)
+    tvec = jnp.full((bucket_rows,), 1e-3, jnp.float32)
+    for t in cands:
+        if kind == "hist":
+            fn = jax.jit(functools.partial(
+                K.dct_hist_coarse, interpret=False, tile=t))
+            args = (xb,)
+        else:
+            fn = jax.jit(functools.partial(
+                K.threshold_quant, interpret=False, tile=t))
+            args = (xb, tvec)
+        out = fn(*args)
+        jax.block_until_ready(out)  # compile + warm outside the timer
+        t0 = _time.perf_counter()
+        for _ in range(3):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        dt = (_time.perf_counter() - t0) / 3
+        if dt < best_dt:
+            best, best_dt = t, dt
+    return best
+
+
+def _tuned_tile(kind: str, bucket_rows: int, backend: str) -> int:
+    key = (kind, bucket_rows, backend)
+    if key not in _TUNED:
+        _TUNED[key] = (_measure_tile(kind, bucket_rows)
+                       if backend == "tpu" else _DEFAULT_TILE[kind])
+    return _TUNED[key]
+
+
+def tuned_tiles() -> dict:
+    """Snapshot of the (kind, bucket_rows, backend) -> tile cache, for
+    benchmark/report introspection."""
+    return dict(_TUNED)
+
+
+def _tiles_for(n_blocks: int) -> tuple[int, int]:
+    if _interpret():
+        return K.HIST_TILE, K.QUANT_TILE
+    b = _bucket_rows(n_blocks)
+    return (_tuned_tile("hist", b, "tpu"), _tuned_tile("quant", b, "tpu"))
+
+
+def _compress_math(xb, eps: float, interpret: bool,
+                   hist_tile: int, quant_tile: int):
+    """Shared body of the single-tensor compress jits.
+
+    TPU path is the two-level histogram: a coarse 32-bin pass, in-graph
+    coarse-bin selection, then a 16-bin refine pass restricted to the coarse
+    bin straddling the eps^2 energy budget — O(elem x 48) binning FLOPs
+    instead of O(elem x 512), same bin edges as the flat selector.
+    """
     if interpret:
         # off-TPU: the pure-jnp oracle compiles to the same math (tests
         # assert bit-equal q); interpret-mode pallas is kept for kernel
@@ -55,17 +127,64 @@ def _compress_padded(xb: jax.Array, eps: float, interpret: bool):
         _, energies = ref.energy_histogram(y)
         t = ref.threshold_from_histogram(energies, eps)
         return ref.quantize_blocks(y, t)
-    y, _, energies = K.dct_hist(xb, interpret=False)
-    t = ref.threshold_from_histogram(energies, eps)
-    return K.threshold_quant(y, t, interpret=False)
+    y, _, ce = K.dct_hist_coarse(xb, interpret=False, tile=hist_tile)
+    c, cc, base, budget = ref.select_coarse(ce, eps)
+    _, fe = K.hist_refine(y, cc, interpret=False, tile=hist_tile)
+    t = ref.select_fine(fe, c, cc, base, budget)
+    return K.threshold_quant(y, t, interpret=False, tile=quant_tile)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "interpret", "hist_tile", "quant_tile"))
+def _compress_padded(xb: jax.Array, eps: float, interpret: bool,
+                     hist_tile: int = K.HIST_TILE,
+                     quant_tile: int = K.QUANT_TILE):
+    return _compress_math(xb, eps, interpret, hist_tile, quant_tile)
 
 
 def spectral_compress(x: jax.Array, eps: float = 1e-2) -> Compressed:
     """Lossy-compress one tensor on device. Relative-L2 error <~ eps + quant."""
     xb, n = ref.blockize(x)
-    xb = _pad_blocks(xb, K.HIST_TILE)
-    q, scale = _compress_padded(xb, float(eps), _interpret())
+    hist_tile, quant_tile = _tiles_for(xb.shape[0])
+    xb = _pad_blocks(xb, hist_tile)
+    q, scale = _compress_padded(xb, float(eps), _interpret(),
+                                hist_tile, quant_tile)
     return Compressed(q, scale, n, tuple(x.shape), x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "interpret", "chunk_blocks", "hist_tile", "quant_tile"))
+def _compress_padded_chunks(xb: jax.Array, eps: float, interpret: bool,
+                            chunk_blocks: int, hist_tile: int,
+                            quant_tile: int):
+    """Same math as ``_compress_padded`` but the int8 output is pre-split
+    into frame-chunk-aligned device buffers inside the jit — no extra device
+    round-trip between quantize and codec chunking."""
+    q, scale = _compress_math(xb, eps, interpret, hist_tile, quant_tile)
+    n = q.shape[0]
+    chunks = tuple(q[off:min(off + chunk_blocks, n)]
+                   for off in range(0, n, chunk_blocks))
+    return chunks, scale
+
+
+def spectral_compress_chunked(x: jax.Array, eps: float = 1e-2, *,
+                              chunk_blocks: int = 4096):
+    """Fused quantize + frame-chunking: lossy-compress one tensor and return
+    its int8 coefficients already split into ``chunk_blocks``-row device
+    buffers (4096 blocks x 256 B = the codec's 1 MiB frame chunk), so the
+    host framing path can D2H-copy and losslessly pack chunk-by-chunk
+    instead of synchronising on one monolithic buffer.
+
+    Returns ``(chunks, scale, n_elements)`` with ``concat(chunks)`` bitwise
+    equal to ``spectral_compress(x, eps).q``.
+    """
+    xb, n = ref.blockize(x)
+    hist_tile, quant_tile = _tiles_for(xb.shape[0])
+    xb = _pad_blocks(xb, hist_tile)
+    chunks, scale = _compress_padded_chunks(
+        xb, float(eps), _interpret(), int(chunk_blocks),
+        hist_tile, quant_tile)
+    return chunks, scale, n
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -80,8 +199,11 @@ def spectral_decompress(c: Compressed) -> jax.Array:
     return ref.unblockize(xb, c.n_elements, c.shape, c.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def _compress_tree_packed(blocks: tuple, eps: float, interpret: bool):
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "interpret", "hist_tile", "quant_tile"))
+def _compress_tree_packed(blocks: tuple, eps: float, interpret: bool,
+                          hist_tile: int = K.HIST_TILE,
+                          quant_tile: int = K.QUANT_TILE):
     """ONE fused dispatch over pre-bucketed per-leaf block groups.
 
     ``blocks`` are the already-blockized leaves (f32 ``(rows_i, BLOCK)``,
@@ -114,20 +236,29 @@ def _compress_tree_packed(blocks: tuple, eps: float, interpret: bool):
             qs.append(q)
             ss.append(s)
         return tuple(qs), tuple(ss)
-    # TPU: one dct_hist_tiled + one threshold_quant pallas invocation. Tile
-    # rows never straddle leaves (each leaf is padded to a HIST_TILE
-    # multiple), so per-tile histograms segment-sum exactly to the per-leaf
-    # histograms the per-leaf kernels would have produced.
+    # TPU: two-level selection in one fused graph — a coarse tiled pass,
+    # per-leaf segment-summed coarse histograms, then a tiled refine pass
+    # driven by each block's leaf coarse index. Tile rows never straddle
+    # leaves (each leaf is padded to a pow2 bucket >= hist_tile), so
+    # per-tile histograms segment-sum exactly to the per-leaf histograms
+    # the per-leaf kernels would have produced.
     import numpy as _np
-    y, _, eng_t = K.dct_hist_tiled(packed, interpret=False)
-    tile_seg = _np.repeat(_np.arange(len(counts)),
-                          [c // K.HIST_TILE for c in counts])
-    seg_eng = jnp.zeros((len(counts), ref.NBINS), jnp.float32
-                        ).at[jnp.asarray(tile_seg)].add(eng_t)
-    t_seg = jax.vmap(lambda e: ref.threshold_from_histogram(e, eps))(seg_eng)
-    block_seg = _np.repeat(_np.arange(len(counts)), counts)
-    q, s = K.threshold_quant(y, t_seg[jnp.asarray(block_seg)],
-                             interpret=False)
+    y, _, eng_t = K.dct_hist_coarse_tiled(packed, interpret=False,
+                                          tile=hist_tile)
+    tile_seg = jnp.asarray(_np.repeat(_np.arange(len(counts)),
+                                      [c // hist_tile for c in counts]))
+    seg_ce = jnp.zeros((len(counts), ref.NBINS_COARSE), jnp.float32
+                       ).at[tile_seg].add(eng_t)
+    cs, ccs, bases, budgets = jax.vmap(
+        lambda e: ref.select_coarse(e, eps))(seg_ce)
+    block_seg = jnp.asarray(_np.repeat(_np.arange(len(counts)), counts))
+    _, fine_t = K.hist_refine_tiled(y, ccs[block_seg], interpret=False,
+                                    tile=hist_tile)
+    seg_fe = jnp.zeros((len(counts), ref.NBINS_FINE), jnp.float32
+                       ).at[tile_seg].add(fine_t)
+    t_seg = jax.vmap(ref.select_fine)(seg_fe, cs, ccs, bases, budgets)
+    q, s = K.threshold_quant(y, t_seg[block_seg], interpret=False,
+                             tile=quant_tile)
     qs, ss, off = [], [], 0
     for c in counts:
         qs.append(q[off:off + c])
@@ -165,8 +296,13 @@ def spectral_compress_tree(state, eps: float = 1e-2,
             real = xb.shape[0] + ((-xb.shape[0]) % K.HIST_TILE)
             keep_rows.append(real)
             blocks.append(_pad_to_rows(xb, _bucket_rows(real)))
+        hist_tile, quant_tile = _tiles_for(max(b.shape[0] for b in blocks))
+        # tiles must never straddle leaves: clamp to the smallest bucket
+        # (both are powers of two, so the smaller divides every bucket).
+        hist_tile = min(hist_tile, min(b.shape[0] for b in blocks))
         qs, scales = _compress_tree_packed(tuple(blocks), float(eps),
-                                           _interpret())
+                                           _interpret(),
+                                           hist_tile, quant_tile)
         for i, q, scale, real in zip(selected, qs, scales, keep_rows):
             leaf = flat[i][1]
             new_leaves[i] = Compressed(q[:real], scale[:real],
@@ -207,6 +343,8 @@ def compress_in_graph(x: jax.Array, eps: float = 1e-2,
         _, energies = ref.energy_histogram(y)
         t = ref.threshold_from_histogram(energies, eps)
         return ref.quantize_blocks(y, t)
-    y, _, energies = K.dct_hist(xb, interpret=False)
-    t = ref.threshold_from_histogram(energies, eps)
+    y, _, ce = K.dct_hist_coarse(xb, interpret=False)
+    c, cc, base, budget = ref.select_coarse(ce, eps)
+    _, fe = K.hist_refine(y, cc, interpret=False)
+    t = ref.select_fine(fe, c, cc, base, budget)
     return K.threshold_quant(y, t, interpret=False)

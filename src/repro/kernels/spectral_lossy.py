@@ -6,22 +6,34 @@ host for lossless coding. Its GPU implementation is dominated by two sort
 kernels (finding F7) — a poor fit for the TPU, which has no efficient global
 sort in the VPU. The TPU-native redesign (see kernels/ref.py for the oracle):
 
-  kernel 1 (dct_hist):       Y = X @ D^T on the MXU, and a one-pass absolute
-                             log2-|Y| histogram of (count, energy) per bin,
-                             accumulated across the grid — sort-free selection
-                             statistics. Histogram binning is computed as two
-                             mat-vecs against a one-hot bin matrix, so even the
-                             "scatter" is MXU work.
-  host (cheap, O(NBINS)):    threshold = largest bin edge whose below-edge
-                             cumulative energy fits the eps^2 budget.
+  kernel 1 (dct_hist_coarse): Y = X @ D^T on the MXU, and a one-pass absolute
+                             log2-|Y| COARSE histogram (32 bins, each covering
+                             16 fine bins) of (count, energy), accumulated
+                             across the grid — sort-free selection statistics.
+                             Binning is computed as mat-vecs against a one-hot
+                             bin matrix, so even the "scatter" is MXU work.
+  kernel 1b (hist_refine):   fine (count, energy) histogram of the 16 fine
+                             bins inside the one coarse bin that straddles the
+                             eps^2 energy budget. Together with the coarse
+                             pass this is O(elements x 48) binning FLOPs at
+                             the full 512-bin threshold resolution; the flat
+                             O(elements x 512) ``dct_hist`` kernel is kept as
+                             the reference/benchmark baseline.
+  select (cheap, in-graph):  threshold = largest fine bin edge whose
+                             below-edge cumulative energy fits the eps^2
+                             budget (ref.select_coarse / ref.select_fine).
   kernel 2 (threshold_quant): zero sub-threshold coeffs, int8-quantize with a
                              per-block scale.
   kernel 3 (dequant_idct):   decompression, X̂ = (q * scale) @ D.
 
 Tiling: blocks are BLOCK=256 wide (2 x 128 lanes; the DCT matmul contraction
-dim is 256 — MXU-aligned). The histogram kernel uses a small block-tile (8)
-so its (elements x NBINS) one-hot stays ~4 MB in VMEM; quant/dequant kernels
-use 64-block tiles (64 x 256 f32 = 64 KB per operand).
+dim is 256 — MXU-aligned). The flat histogram kernel uses a small block-tile
+(8) so its (elements x NBINS) one-hot stays ~4 MB in VMEM; quant/dequant
+kernels use 64-block tiles (64 x 256 f32 = 64 KB per operand). Every kernel
+takes a ``tile=`` override so ``ops.py`` can swap in an autotuned tile per
+power-of-two shape bucket; buffers whose block count is not a tile multiple
+are zero-padded up to it and the result sliced back (a prime block count must
+never silently degrade the launch to single-block grid steps).
 
 All kernels run under interpret=True on CPU (tests/CI) and compile for TPU
 unchanged; ``ops.py`` picks the mode from the backend.
@@ -34,22 +46,75 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import (BLOCK, LOG2_HI, LOG2_LO, NBINS, dct_matrix)
+from repro.kernels.ref import (BLOCK, LOG2_HI, LOG2_LO, NBINS, NBINS_COARSE,
+                               NBINS_FINE, dct_matrix)
 
-HIST_TILE = 8      # blocks per grid step in the histogram pass
+HIST_TILE = 8      # blocks per grid step in the histogram passes
 QUANT_TILE = 64    # blocks per grid step in quant/dequant passes
 
 
-def _pick_tile(n_blocks: int, want: int) -> int:
-    t = min(want, n_blocks)
-    while n_blocks % t:
-        t -= 1
-    return t
+def _check_blocks(xb: jax.Array, tile: int, name: str) -> None:
+    """Loud shape validation (a bare assert would vanish under python -O)."""
+    if xb.ndim != 2 or xb.shape[1] != BLOCK:
+        raise ValueError(
+            f"{name}: expected a (n_blocks, {BLOCK}) blocked buffer, got "
+            f"shape {tuple(xb.shape)}")
+    if xb.shape[0] % tile:
+        raise ValueError(
+            f"{name}: n_blocks={xb.shape[0]} must be a multiple of the "
+            f"{tile}-block tile (pad with ops._pad_blocks first)")
+
+
+def _pad_rows(buf: jax.Array, pad: int, value: float = 0.0) -> jax.Array:
+    if not pad:
+        return buf
+    width = ((0, pad), (0, 0)) if buf.ndim == 2 else ((0, pad),)
+    return jnp.pad(buf, width, constant_values=value)
+
+
+def _tile_and_pad(n_blocks: int, want: int) -> tuple[int, int]:
+    """Full-width tile for an arbitrary block count: never shrink the tile
+    to a divisor (a prime ``n_blocks`` used to degrade to tile=1 — an
+    n_blocks-step grid of single-block kernel invocations); instead the
+    caller zero-pads to the next tile multiple and slices the result."""
+    tile = max(1, min(want, n_blocks))
+    return tile, (-n_blocks) % tile
+
+
+def _bin_idx(a: jax.Array) -> jax.Array:
+    """Flat 512-level bin index (same math as ref.bin_index; the coarse
+    kernel derives coarse bins by integer division so coarse/fine binning
+    can never disagree near a bin boundary)."""
+    lg = jnp.where(a > 0, jnp.log2(jnp.maximum(a, 1e-38)), LOG2_LO)
+    return jnp.clip(((lg - LOG2_LO) * (NBINS / (LOG2_HI - LOG2_LO)))
+                    .astype(jnp.int32), 0, NBINS - 1)
 
 
 # ---------------------------------------------------------------------------
 # kernel 1: DCT + histogram accumulation
 # ---------------------------------------------------------------------------
+
+def _dct_and_bins(x_ref, d_ref, y_ref):
+    """Shared kernel prologue: DCT matmul + flat bin indices of the tile."""
+    x = x_ref[...].astype(jnp.float32)          # (TILE, BLOCK)
+    d = d_ref[...]                              # (BLOCK, BLOCK)
+    y = jax.lax.dot_general(                    # y = x @ d.T   (MXU)
+        x, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[...] = y
+    a = jnp.abs(y.reshape(-1))                  # (TILE*BLOCK,)
+    return a * a, _bin_idx(a)
+
+
+def _onehot_hist(a2, idx, nbins):
+    """One-hot binning as matmul work (no scatter on the VPU)."""
+    bins = jax.lax.broadcasted_iota(jnp.int32, (a2.shape[0], nbins), 1)
+    onehot = (idx[:, None] == bins).astype(jnp.float32)
+    cnt = jnp.sum(onehot, axis=0)
+    eng = jax.lax.dot_general(
+        a2, onehot, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return cnt, eng
+
 
 def _dct_hist_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
     i = pl.program_id(0)
@@ -59,41 +124,33 @@ def _dct_hist_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
         eng_ref[...] = jnp.zeros_like(eng_ref)
 
-    x = x_ref[...].astype(jnp.float32)          # (TILE, BLOCK)
-    d = d_ref[...]                              # (BLOCK, BLOCK)
-    y = jax.lax.dot_general(                    # y = x @ d.T   (MXU)
-        x, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    y_ref[...] = y
-
-    a = jnp.abs(y.reshape(-1))                  # (TILE*BLOCK,)
-    a2 = a * a
-    lg = jnp.where(a > 0, jnp.log2(jnp.maximum(a, 1e-38)), LOG2_LO)
-    idx = jnp.clip(((lg - LOG2_LO) * (NBINS / (LOG2_HI - LOG2_LO)))
-                   .astype(jnp.int32), 0, NBINS - 1)
-    # one-hot binning as matmul work (no scatter on the VPU)
-    bins = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], NBINS), 1)
-    onehot = (idx[:, None] == bins).astype(jnp.float32)
-    cnt_ref[...] += jnp.sum(onehot, axis=0)
-    eng_ref[...] += jax.lax.dot_general(
-        a2, onehot, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    a2, idx = _dct_and_bins(x_ref, d_ref, y_ref)
+    cnt, eng = _onehot_hist(a2, idx, NBINS)
+    cnt_ref[...] += cnt
+    eng_ref[...] += eng
 
 
-def dct_hist(xb: jax.Array, *, interpret: bool = True):
-    """xb: (n_blocks, BLOCK) f32 -> (y, counts, energies)."""
+def dct_hist(xb: jax.Array, *, interpret: bool = True,
+             tile: int | None = None):
+    """xb: (n_blocks, BLOCK) f32 -> (y, counts, energies).
+
+    The flat 512-bin histogram pass — kept as the baseline the two-level
+    (``dct_hist_coarse`` + ``hist_refine``) pair is benchmarked against.
+    """
+    tile = tile or HIST_TILE
+    _check_blocks(xb, tile, "dct_hist")
     n_blocks = xb.shape[0]
-    assert n_blocks % HIST_TILE == 0 and xb.shape[1] == BLOCK
     d = jnp.asarray(dct_matrix(BLOCK))
-    grid = (n_blocks // HIST_TILE,)
+    grid = (n_blocks // tile,)
     return pl.pallas_call(
         _dct_hist_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((NBINS,), lambda i: (0,)),
             pl.BlockSpec((NBINS,), lambda i: (0,)),
         ],
@@ -104,6 +161,121 @@ def dct_hist(xb: jax.Array, *, interpret: bool = True):
         ],
         interpret=interpret,
     )(xb, d)
+
+
+# ---------------------------------------------------------------------------
+# kernel 1 (two-level): DCT + coarse 32-bin histogram
+# ---------------------------------------------------------------------------
+
+def _dct_hist_coarse_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        eng_ref[...] = jnp.zeros_like(eng_ref)
+
+    a2, idx = _dct_and_bins(x_ref, d_ref, y_ref)
+    cnt, eng = _onehot_hist(a2, idx // NBINS_FINE, NBINS_COARSE)
+    cnt_ref[...] += cnt
+    eng_ref[...] += eng
+
+
+def dct_hist_coarse(xb: jax.Array, *, interpret: bool = True,
+                    tile: int | None = None):
+    """xb: (n_blocks, BLOCK) f32 -> (y, counts (32,), energies (32,)).
+
+    First pass of the two-level selector: same DCT matmul as ``dct_hist``
+    but the one-hot binning runs against 32 coarse bins (each covering 16
+    fine bins of the flat histogram) — O(elements x 32) binning FLOPs.
+    """
+    tile = tile or HIST_TILE
+    _check_blocks(xb, tile, "dct_hist_coarse")
+    n_blocks = xb.shape[0]
+    d = jnp.asarray(dct_matrix(BLOCK))
+    return pl.pallas_call(
+        _dct_hist_coarse_kernel,
+        grid=(n_blocks // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((NBINS_COARSE,), lambda i: (0,)),
+            pl.BlockSpec((NBINS_COARSE,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((NBINS_COARSE,), jnp.float32),
+            jax.ShapeDtypeStruct((NBINS_COARSE,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, d)
+
+
+# ---------------------------------------------------------------------------
+# kernel 1r (two-level): fine refine histogram inside one coarse bin
+# ---------------------------------------------------------------------------
+
+def _hist_refine_kernel(y_ref, c_ref, cnt_ref, eng_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        eng_ref[...] = jnp.zeros_like(eng_ref)
+
+    y = y_ref[...]                               # (TILE, BLOCK)
+    a = jnp.abs(y)
+    idx = _bin_idx(a)                            # (TILE, BLOCK) flat bins
+    c = c_ref[...][:, None]                      # (TILE, 1) coarse bin/block
+    member = (idx // NBINS_FINE) == c
+    fine = jnp.where(member, idx - c * NBINS_FINE, 0).reshape(-1)
+    w = member.astype(jnp.float32).reshape(-1)
+    a2 = (a * a).reshape(-1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (fine.shape[0], NBINS_FINE), 1)
+    onehot = (fine[:, None] == bins).astype(jnp.float32) * w[:, None]
+    cnt_ref[...] += jnp.sum(onehot, axis=0)
+    eng_ref[...] += jax.lax.dot_general(
+        a2, onehot, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def hist_refine(y: jax.Array, coarse: jax.Array, *, interpret: bool = True,
+                tile: int | None = None):
+    """y: (n_blocks, BLOCK) DCT coefficients, coarse: per-block coarse bin
+    (scalar or (n_blocks,) int32 — per-block so one invocation refines a
+    packed multi-leaf buffer) -> (counts (16,), energies (16,)).
+
+    Second pass of the two-level selector: fine (count, energy) histogram
+    of the 16 fine bins inside each block's coarse bin — O(elements x 16)
+    binning FLOPs. Elements outside the coarse bin contribute exactly 0.0,
+    so each fine energy is bitwise the flat histogram's bin 16*coarse+k.
+    """
+    tile = tile or HIST_TILE
+    _check_blocks(y, tile, "hist_refine")
+    n_blocks = y.shape[0]
+    coarse = jnp.asarray(coarse, jnp.int32)
+    if coarse.ndim == 0 or coarse.size == 1:
+        coarse = jnp.broadcast_to(coarse.reshape(()), (n_blocks,))
+    return pl.pallas_call(
+        _hist_refine_kernel,
+        grid=(n_blocks // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((NBINS_FINE,), lambda i: (0,)),
+            pl.BlockSpec((NBINS_FINE,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NBINS_FINE,), jnp.float32),
+            jax.ShapeDtypeStruct((NBINS_FINE,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, coarse)
 
 
 # ---------------------------------------------------------------------------
@@ -118,40 +290,29 @@ def dct_hist(xb: jax.Array, *, interpret: bool = True):
 # HIST_TILE multiples before packing, so no tile straddles two leaves).
 
 def _dct_hist_tiled_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
-    x = x_ref[...].astype(jnp.float32)          # (TILE, BLOCK)
-    d = d_ref[...]                              # (BLOCK, BLOCK)
-    y = jax.lax.dot_general(                    # y = x @ d.T   (MXU)
-        x, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    y_ref[...] = y
-
-    a = jnp.abs(y.reshape(-1))                  # (TILE*BLOCK,)
-    a2 = a * a
-    lg = jnp.where(a > 0, jnp.log2(jnp.maximum(a, 1e-38)), LOG2_LO)
-    idx = jnp.clip(((lg - LOG2_LO) * (NBINS / (LOG2_HI - LOG2_LO)))
-                   .astype(jnp.int32), 0, NBINS - 1)
-    bins = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], NBINS), 1)
-    onehot = (idx[:, None] == bins).astype(jnp.float32)
-    cnt_ref[...] = jnp.sum(onehot, axis=0)[None]
-    eng_ref[...] = jax.lax.dot_general(
-        a2, onehot, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)[None]
+    a2, idx = _dct_and_bins(x_ref, d_ref, y_ref)
+    cnt, eng = _onehot_hist(a2, idx, NBINS)
+    cnt_ref[...] = cnt[None]
+    eng_ref[...] = eng[None]
 
 
-def dct_hist_tiled(xb: jax.Array, *, interpret: bool = True):
+def dct_hist_tiled(xb: jax.Array, *, interpret: bool = True,
+                   tile: int | None = None):
     """xb: (n_blocks, BLOCK) f32 -> (y, counts (n_tiles, NBINS), energies)."""
+    tile = tile or HIST_TILE
+    _check_blocks(xb, tile, "dct_hist_tiled")
     n_blocks = xb.shape[0]
-    assert n_blocks % HIST_TILE == 0 and xb.shape[1] == BLOCK
     d = jnp.asarray(dct_matrix(BLOCK))
-    n_tiles = n_blocks // HIST_TILE
+    n_tiles = n_blocks // tile
     return pl.pallas_call(
         _dct_hist_tiled_kernel,
         grid=(n_tiles,),
         in_specs=[
-            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((HIST_TILE, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
             pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
         ],
@@ -162,6 +323,99 @@ def dct_hist_tiled(xb: jax.Array, *, interpret: bool = True):
         ],
         interpret=interpret,
     )(xb, d)
+
+
+def _dct_hist_coarse_tiled_kernel(x_ref, d_ref, y_ref, cnt_ref, eng_ref):
+    a2, idx = _dct_and_bins(x_ref, d_ref, y_ref)
+    cnt, eng = _onehot_hist(a2, idx // NBINS_FINE, NBINS_COARSE)
+    cnt_ref[...] = cnt[None]
+    eng_ref[...] = eng[None]
+
+
+def dct_hist_coarse_tiled(xb: jax.Array, *, interpret: bool = True,
+                          tile: int | None = None):
+    """xb -> (y, counts (n_tiles, 32), energies (n_tiles, 32)).
+
+    Per-tile coarse histograms for the fused multi-leaf dispatch: the
+    caller segment-sums tile rows back to per-leaf coarse histograms
+    (leaves are padded to tile multiples, so no tile straddles two leaves).
+    """
+    tile = tile or HIST_TILE
+    _check_blocks(xb, tile, "dct_hist_coarse_tiled")
+    n_blocks = xb.shape[0]
+    d = jnp.asarray(dct_matrix(BLOCK))
+    n_tiles = n_blocks // tile
+    return pl.pallas_call(
+        _dct_hist_coarse_tiled_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS_COARSE), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS_COARSE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, NBINS_COARSE), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, NBINS_COARSE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, d)
+
+
+def _hist_refine_tiled_kernel(y_ref, c_ref, cnt_ref, eng_ref):
+    y = y_ref[...]
+    a = jnp.abs(y)
+    idx = _bin_idx(a)
+    c = c_ref[...][:, None]
+    member = (idx // NBINS_FINE) == c
+    fine = jnp.where(member, idx - c * NBINS_FINE, 0).reshape(-1)
+    w = member.astype(jnp.float32).reshape(-1)
+    a2 = (a * a).reshape(-1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (fine.shape[0], NBINS_FINE), 1)
+    onehot = (fine[:, None] == bins).astype(jnp.float32) * w[:, None]
+    cnt_ref[...] = jnp.sum(onehot, axis=0)[None]
+    eng_ref[...] = jax.lax.dot_general(
+        a2, onehot, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]
+
+
+def hist_refine_tiled(y: jax.Array, coarse: jax.Array, *,
+                      interpret: bool = True, tile: int | None = None):
+    """y: (n_blocks, BLOCK), coarse: (n_blocks,) int32 per-block coarse bin
+    -> (counts (n_tiles, 16), energies (n_tiles, 16)).
+
+    Tiled refine pass for the fused multi-leaf dispatch: every block of a
+    leaf carries the leaf's selected coarse bin, tile rows segment-sum back
+    to per-leaf fine histograms.
+    """
+    tile = tile or HIST_TILE
+    _check_blocks(y, tile, "hist_refine_tiled")
+    n_blocks = y.shape[0]
+    n_tiles = n_blocks // tile
+    coarse = jnp.asarray(coarse, jnp.int32)
+    if coarse.ndim == 0 or coarse.size == 1:
+        coarse = jnp.broadcast_to(coarse.reshape(()), (n_blocks,))
+    return pl.pallas_call(
+        _hist_refine_tiled_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, NBINS_FINE), lambda i: (i, 0)),
+            pl.BlockSpec((1, NBINS_FINE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, NBINS_FINE), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, NBINS_FINE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y, coarse)
 
 
 # ---------------------------------------------------------------------------
@@ -179,18 +433,30 @@ def _threshold_quant_kernel(y_ref, t_ref, q_ref, s_ref):
     s_ref[...] = scale.astype(jnp.float32)
 
 
-def threshold_quant(y: jax.Array, t: jax.Array, *, interpret: bool = True):
+def threshold_quant(y: jax.Array, t: jax.Array, *, interpret: bool = True,
+                    tile: int | None = None):
     """``t`` is a scalar threshold or a per-block (n_blocks,) vector — the
     latter lets one invocation quantize a packed multi-leaf buffer where
-    every leaf carries its own eps-derived threshold."""
+    every leaf carries its own eps-derived threshold.
+
+    Block counts that are not a tile multiple are zero-padded up to it and
+    the pad rows sliced off the result (each block quantizes independently,
+    so real rows are bit-identical); the tile itself is never shrunk.
+    """
+    if y.ndim != 2 or y.shape[1] != BLOCK:
+        raise ValueError(
+            f"threshold_quant: expected (n_blocks, {BLOCK}) coefficients, "
+            f"got shape {tuple(y.shape)}")
     n_blocks = y.shape[0]
-    tile = _pick_tile(n_blocks, QUANT_TILE)
+    tile, pad = _tile_and_pad(n_blocks, tile or QUANT_TILE)
     t = jnp.asarray(t, jnp.float32)
     if t.ndim == 0 or t.size == 1:
         t = jnp.broadcast_to(t.reshape(()), (n_blocks,))
-    return pl.pallas_call(
+    y = _pad_rows(y, pad)
+    t = _pad_rows(t, pad)
+    q, s = pl.pallas_call(
         _threshold_quant_kernel,
-        grid=(n_blocks // tile,),
+        grid=((n_blocks + pad) // tile,),
         in_specs=[
             pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((tile,), lambda i: (i,)),
@@ -200,11 +466,12 @@ def threshold_quant(y: jax.Array, t: jax.Array, *, interpret: bool = True):
             pl.BlockSpec((tile,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.int8),
-            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks + pad, BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks + pad,), jnp.float32),
         ],
         interpret=interpret,
     )(y, t)
+    return (q[:n_blocks], s[:n_blocks]) if pad else (q, s)
 
 
 # ---------------------------------------------------------------------------
@@ -218,19 +485,27 @@ def _dequant_idct_kernel(q_ref, s_ref, d_ref, x_ref):
         preferred_element_type=jnp.float32)
 
 
-def dequant_idct(q: jax.Array, scale: jax.Array, *, interpret: bool = True):
+def dequant_idct(q: jax.Array, scale: jax.Array, *, interpret: bool = True,
+                 tile: int | None = None):
+    if q.ndim != 2 or q.shape[1] != BLOCK:
+        raise ValueError(
+            f"dequant_idct: expected (n_blocks, {BLOCK}) int8 coefficients, "
+            f"got shape {tuple(q.shape)}")
     n_blocks = q.shape[0]
-    tile = _pick_tile(n_blocks, QUANT_TILE)
+    tile, pad = _tile_and_pad(n_blocks, tile or QUANT_TILE)
     d = jnp.asarray(dct_matrix(BLOCK))
-    return pl.pallas_call(
+    q = _pad_rows(q, pad)
+    scale = _pad_rows(scale, pad, 1.0)   # pad rows dequantize 0*1 -> 0
+    x = pl.pallas_call(
         _dequant_idct_kernel,
-        grid=(n_blocks // tile,),
+        grid=((n_blocks + pad) // tile,),
         in_specs=[
             pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((BLOCK, BLOCK), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((tile, BLOCK), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_blocks + pad, BLOCK), jnp.float32),
         interpret=interpret,
     )(q, scale, d)
+    return x[:n_blocks] if pad else x

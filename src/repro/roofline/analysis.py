@@ -109,11 +109,16 @@ def parse_collectives(hlo_text: str, default_group: int = 1
         if not m:
             continue
         dtype, dims, kind = m.group(1), m.group(2), m.group(3)
-        if dtype not in _DTYPE_BYTES:
-            continue
         shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
-        eb = _DTYPE_BYTES[dtype]
         g = _group_size(line, default_group)
+        if dtype not in _DTYPE_BYTES:
+            # exotic element type (e.g. f8e8m0): keep the op with zero
+            # elem/wire bytes instead of dropping it silently — analyze()
+            # surfaces the undercount in the report note and per-kind table.
+            ops.append(CollectiveOp(kind.replace("-start", ""), dtype, shape,
+                                    0, g, 0.0))
+            continue
+        eb = _DTYPE_BYTES[dtype]
         n = 1
         for d in shape:
             n *= d
@@ -180,12 +185,21 @@ def analyze(*, arch: str, shape: str, mesh_desc: str, chips: int,
     wire = (wire_bytes_override if wire_bytes_override is not None
             else sum(o.wire_bytes for o in ops))
     by_kind: dict[str, dict] = {}
+    unknown = [o for o in ops if o.elem_bytes == 0]
     for o in ops:
         e = by_kind.setdefault(o.kind, {"count": 0, "wire_bytes": 0.0,
                                         "tensor_bytes": 0})
         e["count"] += 1
         e["wire_bytes"] += o.wire_bytes
         e["tensor_bytes"] += o.tensor_bytes
+        if o.elem_bytes == 0:
+            e["unknown_dtype"] = e.get("unknown_dtype", 0) + 1
+    note = ""
+    if unknown:
+        dts = ", ".join(sorted({o.dtype for o in unknown}))
+        note = (f"{len(unknown)} collective op(s) with unknown dtype(s) "
+                f"[{dts}] counted with zero wire bytes — collective term "
+                "is a lower bound")
     compute_s = flops / PEAK_FLOPS_BF16
     hlo_memory_s = byts / HBM_BW
     mem_bytes = (model_bytes_per_device if model_bytes_per_device is not None
@@ -204,7 +218,8 @@ def analyze(*, arch: str, shape: str, mesh_desc: str, chips: int,
         useful_flops_ratio=useful, bottleneck=bottleneck,
         hlo_memory_s=hlo_memory_s,
         model_bytes_per_device=float(mem_bytes),
-        collectives_by_kind=by_kind, memory_per_device_bytes=memory_stats)
+        collectives_by_kind=by_kind, memory_per_device_bytes=memory_stats,
+        note=note)
 
 
 def model_flops(cfg, shape) -> float:

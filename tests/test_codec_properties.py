@@ -210,3 +210,79 @@ def test_v1_v2_frame_cross_decoding_property(n, seed, codec):
     np.testing.assert_array_equal(from_v1, from_v2)
     np.testing.assert_array_equal(from_v1, arr)
     assert from_v1.dtype == from_v2.dtype == arr.dtype
+
+
+# ---------------------------------------------------------------------------
+# two-level threshold selection: bin-edge identity on every payload class
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", PAYLOAD_KINDS)
+@pytest.mark.parametrize("eps", [1e-3, 1e-2, 1e-1, 1.0, 2.0])
+def test_two_level_selector_bin_edge_identical_payload_classes(kind, eps):
+    """The coarse-32 + refine-16 selector must pick the same quantized bin
+    edge as the flat 512-bin selector on every payload class (including
+    eps >= 1 drop-everything), so spectral_compress outputs stay
+    bit-identical across the kernel rework."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+
+    arr = _payload(kind, floats=True)
+    if arr.size == 0:
+        pytest.skip("blockize is undefined for empty tensors")
+    x = jnp.asarray(arr)
+    y = kref.dct_blocks(kref.blockize(x)[0])
+    _, energies = kref.energy_histogram(y)
+    t_flat = kref.threshold_from_histogram(energies, eps)
+    t_two = kref.threshold_two_level(y, eps)
+    np.testing.assert_array_equal(np.asarray(t_flat), np.asarray(t_two))
+    c_flat = kref.compress(x, eps)
+    c_two = kref.compress(x, eps, selector="two_level")
+    np.testing.assert_array_equal(np.asarray(c_flat.q), np.asarray(c_two.q))
+    np.testing.assert_array_equal(np.asarray(c_flat.scale),
+                                  np.asarray(c_two.scale))
+
+
+# ---------------------------------------------------------------------------
+# streamed chunk-aligned lossy framing == monolithic framing, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [300,                       # single chunk
+                               (1 << 20) + 70_000])       # multi-chunk q
+def test_streamed_chunked_lossy_frame_byte_identical(n):
+    """The fused quantize+chunking path (device-sliced q chunks framed as
+    they land) must produce the exact bytes of the monolithic path — the
+    frame is the checkpoint wire format, so this is a hard contract."""
+    import jax.numpy as jnp
+
+    from repro.core import lossy
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    blob_plain, st_plain = lossy.compress_tensor(x, 1e-2, stream=False)
+    blob_stream, st_stream = lossy.compress_tensor(x, 1e-2, stream=True)
+    assert blob_stream == blob_plain
+    assert st_stream == st_plain
+    pool = codecs.codec_pool()
+    blob_pool, _ = lossy.compress_tensor(x, 1e-2, stream=True, pool=pool)
+    assert blob_pool == blob_plain
+    rt = np.asarray(lossy.decompress_tensor(blob_stream))
+    rt_plain = np.asarray(lossy.decompress_tensor(blob_plain))
+    np.testing.assert_array_equal(rt, rt_plain)
+
+
+def test_assemble_frame_matches_encode():
+    """assemble_frame over self-compressed chunk payloads reproduces
+    encode()'s frame bytes exactly."""
+    rng = np.random.default_rng(6)
+    arr = rng.integers(-120, 120, size=300_000).astype(np.int8)
+    chunk = 1 << 16
+    blob, _ = codecs.encode(arr, "zlib", chunk_bytes=chunk)
+    _, comp, _ = codecs.compressor("zlib")
+    mv = memoryview(arr)
+    payloads = [comp(mv[o:o + chunk]) for o in range(0, arr.nbytes, chunk)]
+    rebuilt = codecs.assemble_frame("zlib", arr.dtype, arr.shape,
+                                    arr.nbytes, chunk, payloads)
+    assert rebuilt == blob
+    with pytest.raises(KeyError):
+        codecs.compressor("nope")

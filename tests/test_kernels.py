@@ -298,3 +298,151 @@ def test_constant_input_padded_l2_bound():
     c = ops.spectral_compress(x, 1e-2)
     xh = ops.spectral_decompress(c)
     assert ref.rel_l2_error(x, xh) <= ref.error_bound(1e-2)
+
+
+# ---------------------------------------------------------------------------
+# two-level histogram selection (coarse 32 + refine 16)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["smooth", "noise", "spiky"])
+@pytest.mark.parametrize("eps", [1e-3, 1e-2, 1e-1, 0.5])
+def test_two_level_selector_matches_flat(kind, eps):
+    """The coarse+refine selector picks the same quantized bin edge as the
+    flat 512-bin selector — the invariant that keeps spectral_compress
+    outputs bit-identical across the kernel rework."""
+    y = ref.dct_blocks(ref.blockize(_signal(40000, kind=kind))[0])
+    _, energies = ref.energy_histogram(y)
+    t_flat = ref.threshold_from_histogram(energies, eps)
+    t_two = ref.threshold_two_level(y, eps)
+    np.testing.assert_array_equal(np.asarray(t_flat), np.asarray(t_two))
+
+
+@pytest.mark.parametrize("selector", ["histogram", "two_level"])
+@pytest.mark.parametrize("case", ["eps_ge_1", "zeros", "single_block"])
+def test_selector_edge_cases(selector, case):
+    if case == "eps_ge_1":
+        x, eps = _signal(4096, kind="noise"), 1.5     # budget >= total energy
+    elif case == "zeros":
+        x, eps = jnp.zeros(4096), 1e-2
+    else:
+        x, eps = _signal(ref.BLOCK, kind="smooth"), 1e-2   # exactly one block
+    c = ref.compress(x, eps, selector=selector)
+    base = ref.compress(x, eps)                       # flat selector
+    np.testing.assert_array_equal(np.asarray(c.q), np.asarray(base.q))
+    np.testing.assert_array_equal(np.asarray(c.scale), np.asarray(base.scale))
+    if case in ("eps_ge_1", "zeros"):
+        # drop-everything / no-energy: every coefficient must be zeroed
+        assert not np.asarray(c.q).any()
+
+
+def test_coarse_and_refine_kernels_match_oracle():
+    x = _signal(40000, kind="noise")
+    xb, _ = ref.blockize(x)
+    xb = jnp.pad(xb, ((0, (-xb.shape[0]) % K.HIST_TILE), (0, 0)))
+    y_k, cnt_k, eng_k = K.dct_hist_coarse(xb, interpret=True)
+    y_o = ref.dct_blocks(xb)
+    cnt_o, eng_o = ref.coarse_energy_histogram(y_o)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cnt_k), np.asarray(cnt_o))
+    np.testing.assert_allclose(np.asarray(eng_k), np.asarray(eng_o),
+                               rtol=1e-4, atol=1e-6)
+    _, cc, _, _ = ref.select_coarse(eng_o, 1e-2)
+    fcnt_k, feng_k = K.hist_refine(y_o, cc, interpret=True)
+    fcnt_o, feng_o = ref.refine_energy_histogram(y_o, cc)
+    np.testing.assert_allclose(np.asarray(fcnt_k), np.asarray(fcnt_o))
+    np.testing.assert_allclose(np.asarray(feng_k), np.asarray(feng_o),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_kernel_two_level_path_threshold_equals_flat():
+    """The full kernel recipe (coarse kernel -> select_coarse -> refine
+    kernel -> select_fine) lands on the flat selector's threshold exactly."""
+    x = _signal(40000, kind="smooth")
+    xb, _ = ref.blockize(x)
+    xb = jnp.pad(xb, ((0, (-xb.shape[0]) % K.HIST_TILE), (0, 0)))
+    eps = 1e-2
+    y, _, ce = K.dct_hist_coarse(xb, interpret=True)
+    c, cc, base, budget = ref.select_coarse(ce, eps)
+    _, fe = K.hist_refine(y, cc, interpret=True)
+    t_two = ref.select_fine(fe, c, cc, base, budget)
+    _, energies = K.dct_hist(xb, interpret=True)[1:]
+    t_flat = ref.threshold_from_histogram(energies, eps)
+    np.testing.assert_array_equal(np.asarray(t_two), np.asarray(t_flat))
+
+
+def test_tiled_rows_segment_sum_parity_with_accumulated():
+    """dct_hist's grid accumulation vs dct_hist_tiled rows segment-summed —
+    the invariant _compress_tree_packed relies on but never asserts
+    directly. y and the (integer-valued) counts must match BITWISE; the
+    energy sums may differ by an ulp per bin (the accumulating kernel fuses
+    ``+=`` into the dot_general reduction, so its fp association is not an
+    ordered sum of the rounded tile partials), so the bit-identity boundary
+    the fused tree path actually depends on is the *selected threshold* —
+    asserted bitwise across an eps sweep."""
+    x = _signal(64 * ref.BLOCK, kind="noise")
+    xb, _ = ref.blockize(x)
+    y_t, cnt_t, eng_t = K.dct_hist_tiled(xb, interpret=True)
+    y_a, cnt_a, eng_a = K.dct_hist(xb, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_t), np.asarray(y_a))
+    cnt_seq = np.zeros(ref.NBINS, np.float32)
+    eng_seq = np.zeros(ref.NBINS, np.float32)
+    for row in range(eng_t.shape[0]):        # same order as the grid walks
+        cnt_seq = cnt_seq + np.asarray(cnt_t[row])
+        eng_seq = eng_seq + np.asarray(eng_t[row])
+    np.testing.assert_array_equal(cnt_seq, np.asarray(cnt_a))
+    np.testing.assert_allclose(eng_seq, np.asarray(eng_a), rtol=1e-6)
+    seg = jnp.sum(eng_t, axis=0)             # what the fused path feeds in
+    for eps in (1e-3, 1e-2, 1e-1, 0.5):
+        t_seg = ref.threshold_from_histogram(seg, eps)
+        t_acc = ref.threshold_from_histogram(eng_a, eps)
+        np.testing.assert_array_equal(np.asarray(t_seg), np.asarray(t_acc))
+
+
+# ---------------------------------------------------------------------------
+# kernel-layer bugfixes: prime block counts + loud shape errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb", [7, 13, 97])
+def test_prime_block_count_uses_full_tile_and_roundtrips(nb):
+    """Prime-sized leaves used to degrade to tile=1 (an nb-step grid of
+    single-block launches); now the buffer is padded to the tile multiple
+    and sliced back, keeping a full-width tile."""
+    tile, pad = K._tile_and_pad(nb, K.QUANT_TILE)
+    assert tile == min(K.QUANT_TILE, nb) and tile > 1
+    assert (nb + pad) % tile == 0
+    rng = np.random.default_rng(nb)
+    y = jnp.asarray(rng.standard_normal((nb, ref.BLOCK)).astype(np.float32))
+    t = jnp.asarray(0.3, jnp.float32)
+    q_k, s_k = K.threshold_quant(y, t, interpret=True)
+    q_o, s_o = ref.quantize_blocks(y, t)
+    assert q_k.shape == (nb, ref.BLOCK)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_o))
+    # scale: amax/127 may fuse to a reciprocal multiply inside the kernel
+    # (1-ulp wobble, independent of padding) — oracle parity is 1e-6
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_o), rtol=1e-6)
+    # the padding itself must be transparent: manually pre-padding to the
+    # tile multiple and slicing must reproduce the internal path BITWISE
+    pad = (-nb) % tile
+    y_pad = jnp.pad(y, ((0, pad), (0, 0)))
+    q_p, s_p = K.threshold_quant(y_pad, t, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_p[:nb]), np.asarray(q_k))
+    np.testing.assert_array_equal(np.asarray(s_p[:nb]), np.asarray(s_k))
+    x_k = K.dequant_idct(q_k, s_k, interpret=True)
+    x_p = K.dequant_idct(q_p, s_p, interpret=True)
+    np.testing.assert_array_equal(np.asarray(x_p[:nb]), np.asarray(x_k))
+    x_o = ref.idct_blocks(ref.dequantize_blocks(q_o, s_o))
+    np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_o),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hist_kernels_raise_valueerror_on_bad_shapes():
+    with pytest.raises(ValueError, match="multiple"):
+        K.dct_hist(jnp.zeros((7, ref.BLOCK)), interpret=True)
+    with pytest.raises(ValueError, match="blocked buffer"):
+        K.dct_hist(jnp.zeros((8, 128)), interpret=True)
+    with pytest.raises(ValueError, match="multiple"):
+        K.dct_hist_tiled(jnp.zeros((9, ref.BLOCK)), interpret=True)
+    with pytest.raises(ValueError, match="expected"):
+        K.threshold_quant(jnp.zeros((4, 128)), jnp.asarray(0.1),
+                          interpret=True)

@@ -81,3 +81,58 @@ def test_decode_flops_use_one_token():
     tr = R.model_flops(cfg, base.SHAPES["train_4k"])
     dec = R.model_flops(cfg, base.SHAPES["decode_32k"])
     assert dec < tr / 100
+
+
+def test_unknown_dtype_collectives_are_counted_not_dropped():
+    """f8e8m0-style lines must surface in the report instead of silently
+    undercounting wire bytes."""
+    hlo = ("%ar = f8e8m0[4096]{0} all-reduce(%x), "
+           "replica_groups={{0,1,2,3}}, to_apply=%add")
+    ops = R.parse_collectives(hlo)
+    assert len(ops) == 1
+    assert ops[0].dtype == "f8e8m0"
+    assert ops[0].elem_bytes == 0 and ops[0].wire_bytes == 0.0
+    assert ops[0].shape == (4096,) and ops[0].group_size == 4
+    rpt = R.analyze(arch="a", shape="s", mesh_desc="m", chips=4,
+                    cost={"flops": 1e12, "bytes accessed": 1e9},
+                    hlo_text=hlo, model_flops_global=1e12)
+    assert "f8e8m0" in rpt.note and "lower bound" in rpt.note
+    assert rpt.collectives_by_kind["all-reduce"]["count"] == 1
+    assert rpt.collectives_by_kind["all-reduce"]["unknown_dtype"] == 1
+    assert rpt.wire_bytes_per_device == 0.0
+
+
+def test_known_dtype_report_has_no_unknown_note():
+    rpt = R.analyze(arch="a", shape="s", mesh_desc="m", chips=4,
+                    cost={"flops": 1e12, "bytes accessed": 1e9},
+                    hlo_text=HLO, model_flops_global=1e12)
+    assert rpt.note == ""
+    assert all("unknown_dtype" not in e
+               for e in rpt.collectives_by_kind.values())
+
+
+def test_kernel_report_places_fn_on_roofline():
+    import jax.numpy as jnp
+
+    from repro.roofline.kernels import RIDGE_INTENSITY, kernel_report
+
+    def mm(a, b):
+        return a @ b
+
+    a = jnp.ones((256, 256), jnp.float32)
+    rpt = kernel_report(mm, (a, a), name="mm", measure=True)
+    assert rpt.name == "mm"
+    assert rpt.bound in ("compute", "memory")
+    assert rpt.roofline_s == max(rpt.compute_s, rpt.memory_s)
+    assert rpt.ridge_intensity == RIDGE_INTENSITY
+    assert rpt.measured_s is not None and rpt.measured_s > 0
+    assert rpt.achieved_fraction is not None
+    d = rpt.to_dict()
+    assert d["bound"] == rpt.bound and "flops" in d
+    # overrides drive the placement when cost_analysis is not trusted
+    # (interpret-mode pallas prices the interpreter, not the kernel)
+    rpt2 = kernel_report(mm, (a, a), flops_override=1e9, bytes_override=1e6)
+    assert rpt2.flops == 1e9 and rpt2.bytes_accessed == 1e6
+    assert rpt2.intensity == pytest.approx(1e3)
+    assert rpt2.bound == "compute"   # 5.1us of math vs 1.2us of HBM
+    assert rpt2.measured_s is None
